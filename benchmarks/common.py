@@ -1,0 +1,87 @@
+"""Shared benchmark machinery: cached pretrained agents, timeline runner."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core.controller import InTune
+from repro.core.pretrain import load_agent_state, pretrain, save_agent
+from repro.data.simulator import Allocation, MachineSpec, PipelineSim
+
+AGENT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "agents")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+RELAUNCH_TICKS = 20   # checkpoint + relaunch dead time for *-Adaptive
+
+
+def get_agent_state(n_stages: int, head: str = "factored",
+                    episodes: int = 60, ticks: int = 300) -> dict:
+    os.makedirs(AGENT_DIR, exist_ok=True)
+    path = os.path.join(AGENT_DIR, f"dqn_{head}_r{n_stages}.npz")
+    if os.path.exists(path):
+        return load_agent_state(path)
+    agent = pretrain(n_stages, episodes=episodes, ticks=ticks,
+                     verbose=False, head=head)
+    save_agent(agent, path)
+    return agent.state_dict()
+
+
+def save_json(name: str, payload):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def run_static(spec, machine, alloc, ticks: int, *, resizes=None,
+               readapt=None, seed: int = 0):
+    """Timeline for a fixed (or relaunch-adapted) allocation.
+
+    resizes: [(tick, n_cpus)]; readapt: fn(spec, machine, seed)->Allocation
+    applied after each resize with a RELAUNCH_TICKS dead window (the
+    paper's manual-intervention baseline behavior).
+    """
+    sim = PipelineSim(spec, machine, seed=seed)
+    tput, mem, used = [], [], []
+    dead = 0
+    cur = alloc
+    resizes = dict(resizes or [])
+    for t in range(ticks):
+        if t in resizes:
+            sim.resize(resizes[t])
+            if readapt is not None:
+                cur = readapt(spec, sim.machine, seed + t)
+                dead = RELAUNCH_TICKS
+        if dead > 0:
+            dead -= 1
+            m = {"throughput": 0.0, "mem_mb": 0.0,
+                 "used_cpus": 0, "oom": False}
+            sim.time += 1
+        else:
+            m = sim.apply(cur)
+        tput.append(m["throughput"])
+        used.append(min(m["used_cpus"], sim.machine.n_cpus))
+        mem.append(m["mem_mb"])
+    return {"throughput": tput, "used_cpus": used, "mem_mb": mem,
+            "oom_count": sim.oom_count,
+            "caps": [resizes.get(t, None) for t in range(ticks)]}
+
+
+def run_intune(spec, machine, ticks: int, *, resizes=None, seed: int = 0,
+               head: str = "factored", finetune_ticks: int = 250):
+    state = get_agent_state(spec.n_stages, head=head)
+    tuner = InTune(spec, machine, seed=seed, head=head, pretrained=state,
+                   finetune_ticks=finetune_ticks)
+    resizes = dict(resizes or [])
+    tput, used = [], []
+    for t in range(ticks):
+        if t in resizes:
+            tuner.resize(resizes[t])
+        rec = tuner.tick()
+        tput.append(rec["throughput"])
+        used.append(min(rec["used_cpus"], tuner.env.sim.machine.n_cpus))
+    return {"throughput": tput, "used_cpus": used,
+            "oom_count": tuner.env.sim.oom_count, "tuner": tuner}

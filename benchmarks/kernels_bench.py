@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: wall-clock of the Pallas path (interpret on
+CPU — correctness-representative, not TPU-speed) vs the jnp reference,
+plus the analytic VMEM working-set per tile (the number that matters for
+the TPU target)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(quiet: bool = False) -> list:
+    rng = np.random.RandomState(0)
+    rows = []
+
+    table = jnp.asarray(rng.randn(1 << 14, 128), jnp.float32)
+    ids = jnp.asarray(rng.randint(0, 1 << 14, (256, 4)), jnp.int32)
+    rows.append({
+        "kernel": "embedding_bag", "shape": "16k x 128, B=256 bag=4",
+        "ref_us": _time(lambda t, i: ref.embedding_bag_ref(t, i), table, ids),
+        "pallas_interpret_us": _time(
+            lambda t, i: ops.embedding_bag(t, i, interpret=True), table, ids),
+        "vmem_tile_kib": (1 * 128 * 4 + 1 * 128 * 4) / 1024,
+    })
+
+    feats = jnp.asarray(rng.randn(512, 27, 128), jnp.float32)
+    rows.append({
+        "kernel": "dot_interact", "shape": "B=512 F=27 D=128",
+        "ref_us": _time(ref.dot_interact_ref, feats),
+        "pallas_interpret_us": _time(
+            lambda f: ops.dot_interact(f, tile_b=128, interpret=True), feats),
+        "vmem_tile_kib": (128 * 27 * 128 * 4 + 729 * 351 * 4) / 1024,
+    })
+
+    neigh = jnp.asarray(rng.randn(1024, 15, 602), jnp.float32)
+    w = jnp.asarray(rng.randn(602, 128) * 0.04, jnp.float32)
+    rows.append({
+        "kernel": "sage_aggregate", "shape": "B=1024 F=15 D=602 H=128",
+        "ref_us": _time(ref.sage_aggregate_ref, neigh, w),
+        "pallas_interpret_us": _time(
+            lambda n, w: ops.sage_aggregate(n, w, tile_b=128,
+                                            interpret=True), neigh, w),
+        "vmem_tile_kib": (128 * 15 * 602 * 4 + 602 * 128 * 4) / 1024,
+    })
+
+    if not quiet:
+        print("\n== Pallas kernels (interpret-mode timing is NOT TPU "
+              "speed; VMEM tile col is the TPU design point) ==")
+        for r in rows:
+            print(f"  {r['kernel']:16s} {r['shape']:28s} "
+                  f"ref {r['ref_us']:9.0f}us  "
+                  f"interp {r['pallas_interpret_us']:9.0f}us  "
+                  f"tile {r['vmem_tile_kib']:7.0f} KiB")
+    common.save_json("kernels.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""§Perf probe: per-collective breakdown for one (arch, shape) cell.
+
+The hypothesis->change->measure loop's measurement tool: lowers the cell,
+runs the loop-aware analysis, and prints the top collective op shapes with
+their loop-scaled byte totals (so you can see WHICH tensor's movement
+dominates the collective roofline term).
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --arch dlrm-criteo \
+        --shape train_batch
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import re
+
+import jax
+
+from repro.configs import get_arch
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.programs import build_program
+
+
+def probe(arch_id: str, shape_name: str, multi_pod: bool = False,
+          top: int = 18) -> dict:
+    arch = get_arch(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    prog = build_program(arch, arch.shape(shape_name), mesh)
+    jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
+                     out_shardings=prog.out_shardings,
+                     donate_argnums=prog.donate_argnums)
+    with mesh:
+        compiled = jitted.lower(*prog.abstract_args).compile()
+    txt = compiled.as_text()
+    comps, factors = H.computation_factors(txt)
+    rows = []
+    for name, lines in comps.items():
+        if name == "ENTRY":
+            continue
+        f = factors.get(name, 1.0)
+        for line in lines:
+            for op in H.COLLECTIVE_OPS:
+                if f" {op}(" in line or f" {op}-start(" in line:
+                    lhs = line.split(" = ", 1)
+                    if len(lhs) != 2:
+                        break
+                    part = lhs[1].split(op)[0].strip()
+                    if part.startswith("("):
+                        shapes = re.findall(r"[a-z0-9]+\[[\d,]*\]", part)
+                    else:
+                        shapes = re.findall(r"^[a-z0-9]+\[[\d,]*\]", part)
+                    b = sum(H.shape_bytes(s) for s in shapes)
+                    rows.append((f * b, op, f, shapes, name[:34],
+                                 line.split("metadata")[0][-90:]))
+                    break
+    rows.sort(reverse=True, key=lambda r: r[0])
+    total = sum(r[0] for r in rows)
+    mem = compiled.memory_analysis()
+    res = H.analyze(txt)
+    print(f"\n== {arch_id}/{shape_name} "
+          f"({'2x16x16' if multi_pod else '16x16'}) ==")
+    print(f"dot flops/dev {res['dot_flops']:.3e} | "
+          f"collective {total/2**30:.2f} GiB/dev | "
+          f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB/dev")
+    for b, op, f, shapes, comp, ctx in rows[:top]:
+        print(f"  {b/2**30:8.3f} GiB x{f:6.0f} {op:18s} {shapes} "
+              f"[{comp}]")
+    return {"total": total, "rows": rows, "dot_flops": res["dot_flops"],
+            "temp": mem.temp_size_in_bytes}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args()
+    probe(args.arch, args.shape, args.multi)

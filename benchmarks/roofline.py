@@ -1,0 +1,118 @@
+"""§Roofline: per (arch x shape) three-term roofline from the dry-run.
+
+Reads experiments/dryrun/pod16x16/*.json (single-pod, per assignment),
+combines:
+  compute term    = loop-aware HLO dot-FLOPs / (chips x 197 TFLOP/s)
+                    (cost_analysis counts while bodies once — documented;
+                    both numbers are reported)
+  memory term     = analytic per-device HBM traffic / 819 GB/s
+  collective term = loop-aware per-device collective bytes / 50 GB/s ICI
+plus MODEL_FLOPS (6·N_active·D convention) and the useful-compute ratio.
+
+Output: printed table + experiments/bench/roofline.json. Also nominates
+the three §Perf hillclimb cells (worst roofline fraction, most
+collective-bound, most paper-representative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from benchmarks import analytic, common
+from repro.configs import get_arch
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun", "pod16x16")
+
+
+def load_cells(mesh_dir: str = DRYRUN_DIR) -> list:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(mesh_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def build_table(mesh_dir: str = DRYRUN_DIR) -> list:
+    rows = []
+    for rec in load_cells(mesh_dir):
+        if rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "status": "skipped",
+                             "reason": rec.get("reason", "")})
+            continue
+        arch = get_arch(rec["arch"])
+        chips = rec["n_devices"]
+        cell = analytic.model_cell(arch, rec["shape"], chips)
+        hlo_flops = rec["loop_aware"]["dot_flops"]
+        coll = rec["loop_aware"]["collective_bytes"]
+        terms = analytic.roofline_terms(
+            cell["model_flops"], hlo_flops, cell["mem_bytes_per_dev"],
+            coll, chips)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "kind": rec["kind"], "chips": chips,
+            "hlo_dot_flops_per_dev": hlo_flops,
+            "cost_analysis_flops": rec["cost_analysis"].get("flops", 0.0),
+            "mem_bytes_per_dev": cell["mem_bytes_per_dev"],
+            "coll_bytes_per_dev": coll,
+            "args_gib_per_dev":
+                rec["memory_analysis"]["argument_size_in_bytes"] / 2 ** 30,
+            "temp_gib_per_dev":
+                rec["memory_analysis"]["temp_size_in_bytes"] / 2 ** 30,
+            **terms,
+        })
+    return rows
+
+
+def pick_hillclimb_cells(rows: list) -> dict:
+    ok = [r for r in rows if r["status"] == "ok"
+          and r["kind"] == "train"]     # training cells drive the fleet
+    # most representative of the paper: its own Criteo DLRM training cell
+    rep = next(r for r in ok if r["arch"] == "dlrm-criteo"
+               and r["shape"] == "train_batch")
+    rest = [r for r in ok if r is not rep]
+    worst = min(rest, key=lambda r: r["roofline_fraction"])
+    rest2 = [r for r in rest if r is not worst]
+    coll_bound = max(rest2, key=lambda r: r["collective_s"]
+                     / max(r["compute_s"], 1e-12))
+    return {"worst_fraction": f"{worst['arch']}/{worst['shape']}",
+            "most_collective_bound":
+                f"{coll_bound['arch']}/{coll_bound['shape']}",
+            "paper_representative": f"{rep['arch']}/{rep['shape']}"}
+
+
+def run(quiet: bool = False) -> list:
+    rows = build_table()
+    if not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --mesh single` first")
+        return rows
+    if not quiet:
+        hdr = (f"{'arch/shape':38s} {'dom':10s} {'compute_s':>10s} "
+               f"{'memory_s':>10s} {'coll_s':>10s} {'useful':>7s} "
+               f"{'roofline':>8s}")
+        print("\n== §Roofline (single pod, 256 chips) ==")
+        print(hdr)
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['arch'] + '/' + r['shape']:38s} SKIPPED "
+                      f"({r['reason'][:60]})")
+                continue
+            print(f"{r['arch'] + '/' + r['shape']:38s} "
+                  f"{r['dominant']:10s} {r['compute_s']:10.2e} "
+                  f"{r['memory_s']:10.2e} {r['collective_s']:10.2e} "
+                  f"{r['useful_ratio']:7.2f} "
+                  f"{r['roofline_fraction']:8.3f}")
+        picks = pick_hillclimb_cells(rows)
+        print("\n§Perf hillclimb cells:", picks)
+    common.save_json("roofline.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
+on the synthetic Criteo stream, with checkpoint/restart and the InTune
+controller tuning the (simulated-machine) ingestion pipeline alongside.
+
+    PYTHONPATH=src python examples/train_dlrm_criteo.py [--steps 300]
+
+~100M params: 8 tables x 2^16 rows x 64-dim = 33.5M embedding + MLPs, plus
+bottom/top MLPs (kept modest so the CPU run finishes in minutes). The
+production-size config is `--arch dlrm-criteo` in the dry-run.
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.controller import InTune
+from repro.data.pipeline import criteo_pipeline
+from repro.data.simulator import MachineSpec
+from repro.data.synthetic import CriteoStream
+from repro.models import dlrm as dlrm_lib
+from repro.train import checkpoint as ckpt
+from repro.train.optim import make_optimizer
+from repro.train.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="experiments/ckpt_dlrm")
+    args = ap.parse_args(argv)
+
+    n_sparse, n_dense, rows, dim = 12, 13, 1 << 16, 96
+    cfg = DLRMConfig(
+        name="dlrm-100m", n_sparse=n_sparse, n_dense=n_dense,
+        embed_dim=dim, vocab_sizes=(rows,) * n_sparse,
+        bottom_mlp=(512, 256, 96), top_mlp=(1024, 512, 256, 1))
+    stream = CriteoStream(n_sparse=n_sparse, n_dense=n_dense, vocab=rows)
+
+    params, _ = dlrm_lib.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params")
+    opt = make_optimizer("adagrad", lr=0.02)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: dlrm_lib.loss_fn(p, cfg, b), opt))
+
+    # resume if a checkpoint exists
+    start = 0
+    tuner = InTune(criteo_pipeline(), MachineSpec(n_cpus=128), seed=0,
+                   head="factored", finetune_ticks=150)
+    last = ckpt.latest_step(args.ckpt_dir)
+    if last is not None:
+        tree, manifest = ckpt.restore(args.ckpt_dir)
+        params, opt_state = tree["params"], tree["opt_state"]
+        start = manifest["step"] + 1
+        if "intune" in manifest["extras"]:
+            ex = manifest["extras"]["intune"]
+            tuner.load_state_dict({
+                "agent": {"qnet": tree["intune_qnet"],
+                          "steps": ex["agent_steps"]},
+                "workers": ex["workers"],
+                "prefetch_mb": ex["prefetch_mb"]})
+        print(f"resumed from step {start - 1}")
+
+    t0 = time.time()
+    losses = []
+    for i in range(start, args.steps):
+        batch = stream.feature_udf(stream.raw_block(args.batch))
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, i, batch)
+        tuner.tick()    # pipeline tuning advances alongside training
+        losses.append(float(metrics["loss"]))
+        if i % 25 == 0:
+            rate = (i - start + 1) * args.batch / (time.time() - t0)
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"({rate:,.0f} samples/s) pipeline "
+                  f"{tuner.history[-1]['throughput']:.1f} b/s")
+        if (i + 1) % args.ckpt_every == 0 or i == args.steps - 1:
+            st = tuner.state_dict()
+            ckpt.save(args.ckpt_dir, i,
+                      {"params": params, "opt_state": opt_state,
+                       "intune_qnet": st["agent"]["qnet"]},
+                      extras={"intune": {
+                          "workers": st["workers"],
+                          "prefetch_mb": st["prefetch_mb"],
+                          "agent_steps": st["agent"]["steps"]}})
+    print(f"final loss {np.mean(losses[-20:]):.4f} "
+          f"(first-20 {np.mean(losses[:20]):.4f}); "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.common import pytree, shardlib  # noqa: F401

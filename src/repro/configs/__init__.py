@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ArchSpec, DLRMConfig, GNNConfig, GNNShape, LMShape, RecsysConfig,
+    RecsysShape, TransformerConfig,
+)
+from repro.configs.registry import get_arch, list_archs  # noqa: F401

@@ -1,0 +1,27 @@
+"""bert4rec [arXiv:1904.06690].
+
+embed_dim=64, 2 transformer blocks, 2 heads, seq_len=200, bidirectional
+self-attention, masked-item (cloze) objective. Item vocab 2^20 (>= the 1M
+candidates of the retrieval_cand cell). Encoder-only: its shape set has no
+decode cell, so nothing is skipped.
+"""
+from repro.configs.base import ArchSpec, RECSYS_SHAPES, RecsysConfig
+
+MODEL = RecsysConfig(
+    name="bert4rec", interaction="bidir-seq",
+    embed_dim=64, n_blocks=2, n_heads=2, seq_len=200, n_items=1 << 20,
+    vocab_sizes=(1 << 20,),
+    # full softmax over 2^20 items is infeasible at batch 65536 (5.5e16 B of
+    # logits) — cloze training uses sampled softmax: 20 masked positions,
+    # 127 uniform negatives per position (index 0 = true item).
+    n_mask=20, n_negatives=127,
+    # §Perf-optimized default (EXPERIMENTS.md §Perf iter1): shard_map item
+    # lookups + sampled-logit psum; 2.2x fewer collective bytes than GSPMD
+    # take over the row-sharded table.
+    tp_lookup=True,
+)
+
+ARCH = ArchSpec(
+    arch_id="bert4rec", family="recsys", model=MODEL, shapes=RECSYS_SHAPES,
+    source="arXiv:1904.06690", optimizer="adam",
+)

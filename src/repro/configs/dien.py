@@ -1,0 +1,19 @@
+"""dien [arXiv:1809.03672].
+
+embed_dim=18, behavior seq_len=100, GRU interest extractor dim=108,
+AUGRU interest evolution, MLP 200-80. Item vocab hashed to 2^20 rows.
+"""
+from repro.configs.base import ArchSpec, RECSYS_SHAPES, RecsysConfig
+
+ROWS = 1 << 20
+
+MODEL = RecsysConfig(
+    name="dien", interaction="augru",
+    embed_dim=18, seq_len=100, gru_dim=108, mlp_dims=(200, 80), n_dense=8,
+    vocab_sizes=(ROWS,), multi_hot=1,
+)
+
+ARCH = ArchSpec(
+    arch_id="dien", family="recsys", model=MODEL, shapes=RECSYS_SHAPES,
+    source="arXiv:1809.03672", optimizer="adam",
+)

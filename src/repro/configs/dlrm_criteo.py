@@ -1,0 +1,32 @@
+"""dlrm-criteo — the paper's own Criteo workload (InTune §5, Meta DLRM).
+
+26 sparse + 13 dense Criteo features, embed_dim=128, bottom MLP
+512-256-128, top MLP 1024-1024-512-256-1. Rows hashed to 2^23 per table:
+26 * 8,388,608 * 128 ≈ 27.9B embedding params — the paper's "25B+
+parameters, most of which are in the embedding tables". Trained with
+hybrid parallelism (tables row-sharded over `model`), optimizer adagrad.
+Not one of the 40 assigned cells — an extra row in the dry-run matrix.
+"""
+from repro.configs.base import ArchSpec, DLRMConfig, RECSYS_SHAPES
+
+MODEL = DLRMConfig(
+    name="dlrm-criteo",
+    n_sparse=26, n_dense=13, embed_dim=128,
+    vocab_sizes=(1 << 23,) * 26,
+    bottom_mlp=(512, 256, 128),
+    top_mlp=(1024, 1024, 512, 256, 1),
+    multi_hot=1,
+    # §Perf-optimized defaults (EXPERIMENTS.md §Perf iter2): bf16 tables +
+    # shard_map row-wise lookup; row-wise adagrad below. The paper-faithful
+    # fp32/adagrad/GSPMD baseline is variant 0 in benchmarks/perf_hillclimb.
+    param_dtype="bfloat16",
+    tp_lookup=True,
+    # 27.9B embedding params need every mesh axis:
+    # 2^23 rows / 512 devices = 16384 rows per shard.
+    sharding_overrides=(("table_rows", ("pod", "data", "model")),),
+)
+
+ARCH = ArchSpec(
+    arch_id="dlrm-criteo", family="dlrm", model=MODEL, shapes=RECSYS_SHAPES,
+    source="InTune paper §5 / arXiv:1906.00091", optimizer="rowwise_adagrad",
+)

@@ -1,0 +1,30 @@
+"""gemma2-2b [arXiv:2408.00118].
+
+26L d_model=2304 8H (GQA kv=4, head_dim=256) d_ff=9216 vocab=256000.
+Local (sliding-window 4096) / global alternating layers, attn logit
+softcap 50, final logit softcap 30, post-block norms, GeGLU, (1+w) RMSNorm,
+embeddings scaled by sqrt(d). HYBRID attention -> long_500k cell RUNS for
+this arch (the local half keeps an O(window) footprint at decode).
+"""
+from repro.configs.base import ArchSpec, LM_SHAPES, TransformerConfig
+
+MODEL = TransformerConfig(
+    name="gemma2-2b",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=9216, vocab_size=256000,
+    sliding_window=4096, local_global_alternating=True,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0,
+    post_norm=True, scale_embed=True, act="gelu",
+    rope_theta=10_000.0, tie_embeddings=True, remat="full", scan_block=2,
+    # 8 q-heads / 4 kv-heads don't divide the 16-way model axis: attention
+    # runs context-parallel (q seq over `model`); weights store TP over
+    # head_dim (256/16); decode cache shards head_dim.
+    sharding_overrides=(("head_dim", "model"), ("act_q_seq", "model"),
+                        ("cache_head_dim", "model")),
+)
+
+ARCH = ArchSpec(
+    arch_id="gemma2-2b", family="lm", model=MODEL, shapes=LM_SHAPES,
+    source="arXiv:2408.00118", optimizer="adam",
+    skipped_shapes=(),   # hybrid local/global: all four cells run
+)

@@ -1,0 +1,18 @@
+"""graphsage-reddit [arXiv:1706.02216].
+
+2 layers, d_hidden=128, mean aggregator, fanout 25-10 (training sampler
+default; the minibatch_lg cell overrides to 15-10 per its shape spec).
+Shapes carry their own graph sizes (cora / reddit / ogbn-products /
+molecule batches).
+"""
+from repro.configs.base import ArchSpec, GNN_SHAPES, GNNConfig
+
+MODEL = GNNConfig(
+    name="graphsage-reddit", n_layers=2, d_hidden=128, n_classes=47,
+    aggregator="mean", sample_sizes=(25, 10),
+)
+
+ARCH = ArchSpec(
+    arch_id="graphsage-reddit", family="gnn", model=MODEL, shapes=GNN_SHAPES,
+    source="arXiv:1706.02216", optimizer="adam",
+)

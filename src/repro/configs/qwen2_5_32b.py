@@ -1,0 +1,31 @@
+"""qwen2.5-32b [hf:Qwen/Qwen2.5-32B family].
+
+64L d_model=5120 40H (GQA kv=8, head_dim=128) d_ff=27648 vocab=152064,
+QKV bias. NOTE: 40 q-heads / 8 kv-heads don't divide the 16-way model axis,
+so attention tensor-parallelism goes over head_dim (128/16=8 per shard);
+score/value contractions psum over `model` (see sharding_overrides).
+"""
+from repro.configs.base import ArchSpec, LM_SHAPES, TransformerConfig
+
+MODEL = TransformerConfig(
+    name="qwen2.5-32b",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=27648, vocab_size=152064,
+    qkv_bias=True, rope_theta=1_000_000.0, tie_embeddings=False,
+    act="silu", remat="full", attn_chunk=256,
+    # 40 q-heads / 8 kv-heads don't divide the 16-way model axis: attention
+    # runs context-parallel (q seq dim over `model`); attention weights
+    # store TP over head_dim (128/16); decode cache shards head_dim.
+    sharding_overrides=(("head_dim", "model"), ("act_q_seq", "model"),
+                        ("cache_head_dim", "model")),
+)
+
+ARCH = ArchSpec(
+    arch_id="qwen2.5-32b", family="lm", model=MODEL, shapes=LM_SHAPES,
+    source="hf:Qwen/Qwen2.5-0.5B (scaled per assignment)", optimizer="adam",
+    skipped_shapes=(
+        ("long_500k",
+         "pure full-attention arch; long_500k runs only for "
+         "sub-quadratic/hybrid attention per assignment"),
+    ),
+)

@@ -1,0 +1,40 @@
+"""Architecture registry: --arch <id> resolution.
+
+Each assigned architecture lives in its own module exposing ARCH: ArchSpec.
+Import is lazy so `import repro.configs` stays cheap.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchSpec
+
+_ARCH_MODULES = {
+    # LM family
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    # GNN
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    # RecSys
+    "wide-deep": "repro.configs.wide_deep",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "dien": "repro.configs.dien",
+    "bert4rec": "repro.configs.bert4rec",
+    # The paper's own workload (Criteo DLRM)
+    "dlrm-criteo": "repro.configs.dlrm_criteo",
+}
+
+
+def list_archs() -> list[str]:
+    return sorted(_ARCH_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {list_archs()}")
+    mod = importlib.import_module(_ARCH_MODULES[arch_id])
+    return mod.ARCH

@@ -1,0 +1,27 @@
+"""smollm-135m [hf:HuggingFaceTB/SmolLM-135M] — llama-arch small dense.
+
+30L d_model=576 9H (GQA kv=3, head_dim=64) d_ff=1536 vocab=49152.
+"""
+from repro.configs.base import ArchSpec, LM_SHAPES, TransformerConfig
+
+MODEL = TransformerConfig(
+    name="smollm-135m",
+    n_layers=30, d_model=576, n_heads=9, n_kv_heads=3, head_dim=64,
+    d_ff=1536, vocab_size=49152,
+    rope_theta=10_000.0, tie_embeddings=True, act="silu", remat="full",
+    # 9 q-heads / 3 kv-heads don't divide the 16-way model axis: attention
+    # runs context-parallel (q seq over `model`); weights store TP over
+    # head_dim (64/16); decode cache shards head_dim.
+    sharding_overrides=(("head_dim", "model"), ("act_q_seq", "model"),
+                        ("cache_head_dim", "model")),
+)
+
+ARCH = ArchSpec(
+    arch_id="smollm-135m", family="lm", model=MODEL, shapes=LM_SHAPES,
+    source="hf:HuggingFaceTB/SmolLM-135M", optimizer="adam",
+    skipped_shapes=(
+        ("long_500k",
+         "pure full-attention arch; long_500k runs only for "
+         "sub-quadratic/hybrid attention per assignment"),
+    ),
+)

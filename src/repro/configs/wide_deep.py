@@ -1,0 +1,26 @@
+"""wide-deep [arXiv:1606.07792].
+
+40 sparse features, embed_dim=32, deep MLP 1024-512-256, concat interaction,
+wide linear arm over the same hashed features. Hashed vocab 2^20 rows per
+feature (stacked tables: 40 x 1,048,576 x 32 ~ 1.3B embedding params).
+multi_hot=4 models the multivalent features (user impressions/installs) the
+paper describes — this is what exercises the EmbeddingBag path.
+"""
+from repro.configs.base import ArchSpec, RECSYS_SHAPES, RecsysConfig
+
+ROWS = 1 << 20
+
+MODEL = RecsysConfig(
+    name="wide-deep", interaction="concat",
+    n_sparse=40, embed_dim=32, mlp_dims=(1024, 512, 256), n_dense=13,
+    vocab_sizes=(ROWS,) * 40, multi_hot=4,
+    # §Perf-optimized defaults (same exchange as dlrm-criteo iter2):
+    # all-axis row sharding + shard_map lookup + row-wise adagrad below.
+    tp_lookup=True,
+    sharding_overrides=(("table_rows", ("pod", "data", "model")),),
+)
+
+ARCH = ArchSpec(
+    arch_id="wide-deep", family="recsys", model=MODEL, shapes=RECSYS_SHAPES,
+    source="arXiv:1606.07792", optimizer="rowwise_adagrad",
+)

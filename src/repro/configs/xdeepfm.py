@@ -1,0 +1,20 @@
+"""xdeepfm [arXiv:1803.05170].
+
+39 sparse features (Criteo: 26 categorical + 13 bucketized dense),
+embed_dim=10, CIN layers 200-200-200, DNN 400-400, linear arm.
+Hashed vocab 2^20 rows per feature.
+"""
+from repro.configs.base import ArchSpec, RECSYS_SHAPES, RecsysConfig
+
+ROWS = 1 << 20
+
+MODEL = RecsysConfig(
+    name="xdeepfm", interaction="cin",
+    n_sparse=39, embed_dim=10, mlp_dims=(400, 400), n_dense=13,
+    vocab_sizes=(ROWS,) * 39, multi_hot=1, cin_dims=(200, 200, 200),
+)
+
+ARCH = ArchSpec(
+    arch_id="xdeepfm", family="recsys", model=MODEL, shapes=RECSYS_SHAPES,
+    source="arXiv:1803.05170", optimizer="adagrad",
+)

@@ -1,0 +1,2 @@
+# The paper's primary contribution: the InTune RL data-pipeline optimizer.
+from repro.core.controller import InTune  # noqa: F401

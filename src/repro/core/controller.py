@@ -1,0 +1,147 @@
+"""InTune controller: the drop-in wrapper (paper §4.4, Listing 1).
+
+    pipe = executor.ThreadedPipeline(spec, fn_by_stage)   # or a simulator
+    tuner = InTune(spec, machine)
+    tuner.attach(pipe)          # live mode: tunes a real executor
+    # or, simulator-driven (benchmarks / offline tuning):
+    for _ in range(ticks):
+        tuner.tick()
+
+One controller instance runs per trainer host; its state (agent weights,
+replay, current allocation) serializes into train/checkpoint.py extras so
+a restarted job resumes pipeline tuning where it left off.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.core import actions as act_lib
+from repro.core.agent import DQNAgent, DQNConfig
+from repro.core.env import PipelineEnv, even_allocation
+from repro.data.pipeline import PipelineSpec
+from repro.data.simulator import Allocation, MachineSpec
+
+
+class InTune:
+    """RL data-pipeline optimizer with online fine-tuning."""
+
+    def __init__(self, spec: PipelineSpec, machine: MachineSpec,
+                 model_latency: float = 0.0, seed: int = 0,
+                 head: str = "joint",
+                 pretrained: Optional[dict] = None,
+                 explore: bool = True,
+                 finetune_ticks: int = 300,
+                 track_best: bool = True):
+        self.spec = spec
+        self.env = PipelineEnv(spec, machine, model_latency, seed=seed)
+        cfg = DQNConfig(obs_dim=self.env.obs_dim, n_stages=spec.n_stages,
+                        head=head)
+        self.agent = DQNAgent(cfg, seed=seed)
+        if pretrained is not None:
+            self.agent.load_state_dict(pretrained)
+            # pretrained agents fine-tune online at the floor epsilon
+            self.agent.steps = max(self.agent.steps, cfg.eps_decay_steps)
+        self.explore = explore
+        # two-phase behavior (paper: "achieves a stable throughput rate
+        # within about 10 minutes"): explore/fine-tune for finetune_ticks,
+        # then serve greedily; a resize re-opens an exploration window.
+        self.finetune_ticks = finetune_ticks
+        self.ticks_since_reset = 0
+        self.track_best = track_best
+        self.best: tuple = (-1.0, None)  # (reward, allocation)
+        self.obs = self.env.observe()
+        self.history: list[dict] = []
+
+    # --------------------------------------------------------- tuning -----
+    def tick(self) -> dict:
+        """One observe -> act -> apply -> learn cycle."""
+        exploring = self.explore and \
+            self.ticks_since_reset < self.finetune_ticks
+        choices = self.agent.act(self.obs, explore=exploring)
+        nobs, reward, metrics = self.env.step(choices)
+        self.agent.observe(self.obs, choices, reward, nobs, done=False)
+        self.obs = nobs
+        self.ticks_since_reset += 1
+        if self.track_best and reward > self.best[0]:
+            self.best = (reward, self.env.alloc.copy())
+        # at the end of the tuning window, snap back to the best allocation
+        # seen (the tuner keeps learning greedily from there)
+        if self.ticks_since_reset == self.finetune_ticks \
+                and self.best[1] is not None:
+            self.env.set_allocation(self.best[1])
+            self.obs = self.env.observe()
+        rec = dict(metrics)
+        rec["reward"] = reward
+        rec["workers"] = self.env.alloc.workers.copy()
+        rec["prefetch_mb"] = self.env.alloc.prefetch_mb
+        self.history.append(rec)
+        return rec
+
+    def run(self, ticks: int) -> list:
+        return [self.tick() for _ in range(ticks)]
+
+    def resize(self, n_cpus: int):
+        """Machine resize: no relaunch needed — the free-CPU observation
+        shifts and the agent re-allocates (the paper's Fig. 5C behavior).
+        Re-opens the exploration window so the agent can work the new
+        resource pool."""
+        self.env.resize(n_cpus)
+        self.ticks_since_reset = 0
+        self.best = (-1.0, None)
+
+    @property
+    def allocation(self) -> Allocation:
+        return self.env.alloc
+
+    # ----------------------------------------------------- live executor --
+    def attach(self, executor, interval_s: float = 1.0):
+        """Tune a real ThreadedPipeline: each tick reads its rate meters,
+        applies the chosen allocation to the worker pools."""
+        self._executor = executor
+        self._interval = interval_s
+
+    def live_tick(self):
+        ex = self._executor
+        stats = ex.stats()
+        choices = self.agent.act(self.obs, explore=self.explore)
+        deltas = act_lib.DELTAS[np.asarray(choices, dtype=int)]
+        workers, pf = act_lib.apply_deltas(
+            np.array(ex.worker_counts(), dtype=int), deltas,
+            prefetch_idx=self.env.prefetch_idx,
+            prefetch_mb=ex.prefetch_mb,
+            max_workers=self.env.sim.machine.n_cpus)
+        ex.set_allocation(workers, pf)
+        reward = stats["throughput"] / self.env.reward_scale \
+            * (1 - min(stats["mem_frac"], 1.0))
+        nobs = self._live_obs(stats)
+        self.agent.observe(self.obs, choices, reward, nobs, done=False)
+        self.obs = nobs
+        return stats
+
+    def _live_obs(self, stats) -> np.ndarray:
+        m = self.env.sim.machine
+        lat = np.asarray(stats["stage_latency"], np.float32)
+        lat = lat / (lat.mean() + 1e-9)
+        workers = np.asarray(stats["workers"], np.float32) / 128.0
+        return np.concatenate([
+            lat, workers,
+            [stats.get("prefetch_mb", 0.0) / m.mem_mb,
+             stats["free_cpus"] / 128.0, 1.0 - stats["mem_frac"],
+             self.env.sim.model_latency, m.dram_bw_gbps / 100.0,
+             m.cpu_ghz / 4.0]]).astype(np.float32)
+
+    # ------------------------------------------------------- persistence --
+    def state_dict(self) -> dict:
+        return {"agent": self.agent.state_dict(),
+                "workers": self.env.alloc.workers.tolist(),
+                "prefetch_mb": float(self.env.alloc.prefetch_mb)}
+
+    def load_state_dict(self, state: dict):
+        self.agent.load_state_dict(state["agent"])
+        self.env.set_allocation(Allocation(
+            np.array(state["workers"], dtype=int),
+            float(state["prefetch_mb"])))
+        self.obs = self.env.observe()

@@ -1,0 +1,90 @@
+"""RL environment for data-pipeline allocation (paper §4.1, Table 2).
+
+Observation (Table 2):
+  agent-modified:   per-stage pipeline latency, free CPUs, free memory
+  uncorrelated:     model latency
+  static:           DRAM-CPU bandwidth, CPU clock
+Reward (Eq. 1):     R = throughput * (1 - mem_used / mem_total)
+                    -> 0 as memory nears 100%; an OOM tick scores 0
+                    throughput for the whole restart window, so the agent
+                    learns the paper's no-OOM behavior from the reward
+                    shape alone.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import actions as act_lib
+from repro.data.pipeline import PipelineSpec
+from repro.data.simulator import Allocation, MachineSpec, PipelineSim
+
+
+def even_allocation(spec: PipelineSpec, n_cpus: int) -> Allocation:
+    """The paper's initialization: simple even division across stages."""
+    per = max(1, n_cpus // spec.n_stages)
+    return Allocation(np.full(spec.n_stages, per, dtype=int),
+                      prefetch_mb=2 * spec.batch_mb)
+
+
+class PipelineEnv:
+    """Steps the simulator under incremental allocation actions."""
+
+    def __init__(self, spec: PipelineSpec, machine: MachineSpec,
+                 model_latency: float = 0.0, seed: int = 0,
+                 reward_scale: Optional[float] = None):
+        self.spec = spec
+        self.sim = PipelineSim(spec, machine, model_latency, seed=seed)
+        self.prefetch_idx = next(
+            (i for i, s in enumerate(spec.stages) if s.kind == "prefetch"),
+            spec.n_stages - 1)
+        # normalize rewards by the oracle throughput so the scale is
+        # comparable across random pipelines during offline pretraining
+        if reward_scale is None:
+            _, best = self.sim.best_allocation()
+            reward_scale = max(best, 1e-6)
+        self.reward_scale = reward_scale
+        self.alloc = even_allocation(spec, machine.n_cpus)
+        self.last_metrics = self.sim.apply(self.alloc)
+
+    @property
+    def obs_dim(self) -> int:
+        # per-stage: relative latency + current workers; globals: prefetch
+        # buffer frac, free CPUs, free memory, model latency, DRAM bw, GHz
+        return 2 * self.spec.n_stages + 6
+
+    def observe(self) -> np.ndarray:
+        m = self.sim.machine
+        lat = self.sim.measured_latencies(self.alloc)
+        free_cpus = m.n_cpus - int(np.sum(self.alloc.workers))
+        free_mem = m.mem_mb - self.sim.memory_used(self.alloc)
+        obs = np.concatenate([
+            lat / (np.mean(lat) + 1e-9),              # relative latencies
+            self.alloc.workers / 128.0,               # current allocation
+            [self.alloc.prefetch_mb / m.mem_mb,
+             free_cpus / 128.0, free_mem / m.mem_mb,
+             self.sim.model_latency,
+             m.dram_bw_gbps / 100.0, m.cpu_ghz / 4.0]])
+        return obs.astype(np.float32)
+
+    def step(self, choices: np.ndarray) -> Tuple[np.ndarray, float, dict]:
+        """choices: per-stage indices into DELTAS. Returns (obs, r, info)."""
+        deltas = act_lib.DELTAS[np.asarray(choices, dtype=int)]
+        workers, pf = act_lib.apply_deltas(
+            self.alloc.workers, deltas, prefetch_idx=self.prefetch_idx,
+            prefetch_mb=self.alloc.prefetch_mb,
+            max_workers=self.sim.machine.n_cpus)
+        self.alloc = Allocation(workers, pf)
+        metrics = self.sim.apply(self.alloc)
+        self.last_metrics = metrics
+        mem_frac = min(metrics["mem_mb"] / self.sim.machine.mem_mb, 1.0)
+        reward = (metrics["throughput"] / self.reward_scale) * (1 - mem_frac)
+        return self.observe(), float(reward), metrics
+
+    def resize(self, n_cpus: int):
+        self.sim.resize(n_cpus)
+
+    def set_allocation(self, alloc: Allocation):
+        self.alloc = alloc.copy()
+        self.last_metrics = self.sim.apply(self.alloc)

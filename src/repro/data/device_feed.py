@@ -1,0 +1,47 @@
+"""Double-buffered host->device feed: overlap ingestion with compute.
+
+Wraps any batch iterator; while the model runs step t, batch t+1 is
+already being transferred (jax.device_put is async). On a pod, each host
+feeds only its shard of the global batch (`shard_slice`). This is the
+"prefetch to accelerator" stage of the paper's pipeline, realized for JAX.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def device_prefetch(it: Iterator, depth: int = 2, sharding=None):
+    """Yields device-resident batches, keeping `depth` in flight."""
+    buf = collections.deque()
+
+    def put(batch):
+        if sharding is not None:
+            return jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, sharding), batch)
+        return jax.tree_util.tree_map(jax.device_put, batch)
+
+    try:
+        for _ in range(depth):
+            buf.append(put(next(it)))
+    except StopIteration:
+        pass
+    while buf:
+        out = buf.popleft()
+        try:
+            buf.append(put(next(it)))
+        except StopIteration:
+            pass
+        yield out
+
+
+def shard_slice(batch: dict, host_id: int, n_hosts: int) -> dict:
+    """Host's slice of a global batch (leading dim split)."""
+    def sl(x):
+        n = x.shape[0]
+        per = n // n_hosts
+        return x[host_id * per:(host_id + 1) * per]
+    return {k: sl(v) for k, v in batch.items()}

@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret=None` auto-selects: compiled on TPU, interpret-mode on CPU
+(the kernel body executes in Python via the Pallas interpreter — this is
+how correctness is validated in this container, per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dot_interact as _di
+from repro.kernels import embedding_bag as _eb
+from repro.kernels import sage_aggregate as _sa
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
+def embedding_bag(table, ids, *, combiner: str = "sum", interpret=None):
+    return _eb.embedding_bag(table, ids, combiner=combiner,
+                             interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def dot_interact(feats, *, tile_b: int = 128, interpret=None):
+    return _di.dot_interact(feats, tile_b=tile_b,
+                            interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def sage_aggregate(neigh, w, *, tile_b: int = 128, interpret=None):
+    return _sa.sage_aggregate(neigh, w, tile_b=tile_b,
+                              interpret=_auto_interpret(interpret))

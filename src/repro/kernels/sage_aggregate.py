@@ -1,0 +1,41 @@
+"""Pallas TPU GraphSAGE block aggregation: fused mean-reduce + projection.
+
+The minibatch GNN hot op: (B, F, D) dense-fanout neighbor features ->
+mean over F -> @ W (D, H). Fusing the reduction with the projection keeps
+the (TB, D) aggregate in VREGs and feeds the MXU directly; unfused, the
+aggregate round-trips HBM. Weights are grid-invariant (one VMEM-resident
+block reused across batch tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(neigh_ref, w_ref, out_ref):
+    f32 = jnp.float32
+    x = neigh_ref[...].astype(f32)                  # (TB, F, D)
+    agg = jnp.mean(x, axis=1)                       # (TB, D)
+    out_ref[...] = jax.lax.dot(
+        agg, w_ref[...].astype(f32),
+        preferred_element_type=f32).astype(out_ref.dtype)
+
+
+def sage_aggregate(neigh, w, *, tile_b: int = 128, interpret: bool = False):
+    """neigh: (B, F, D); w: (D, H) -> (B, H), B % tile_b == 0."""
+    b, f, d = neigh.shape
+    h = w.shape[1]
+    tile_b = min(tile_b, b)
+    assert b % tile_b == 0, (b, tile_b)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, f, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((d, h), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((tile_b, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h), neigh.dtype),
+        interpret=interpret,
+    )(neigh, w)

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). Everything else follows.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the Program (abstract params/opt/inputs + shardings),
+  2. jit(...).lower(...).compile() on the requested mesh,
+  3. records memory_analysis (bytes/device — proves it fits),
+     cost_analysis (FLOPs/bytes for §Roofline), and the collective
+     schedule (op-type -> operand bytes, parsed from the SPMD module),
+  4. writes experiments/dryrun/<mesh>/<arch>__<shape>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+Skipped cells (per assignment rules) are recorded with their reason.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.programs import build_program
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "u1": 1, "s1": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one HLO shape literal like 'bf16[4,1024]'."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device operand bytes of every collective op in an SPMD module.
+
+    Matches lines like:
+      %ag = bf16[8,128]{1,0} all-gather(%x), ...
+      %t = (f32[4], f32[4]) all-reduce(...), ...
+    Output-side shapes are used (operand ~= output for these ops except
+    all-gather where output is the gathered size — we take the op's result
+    shape, the standard payload accounting for ring algorithms).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    # strip sharding annotations to keep the regex simple
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match "= <shape-or-tuple> op-name(" — avoids -start/-done pairs
+            # of async collectives being double counted (we count -start).
+            marker_plain = f" {op}("
+            marker_start = f" {op}-start("
+            if marker_plain not in line and marker_start not in line:
+                continue
+            lhs = line.split(" = ", 1)
+            if len(lhs) != 2:
+                continue
+            rhs = lhs[1]
+            shapes_part = rhs.split(op)[0].strip()
+            if shapes_part.startswith("("):
+                shapes = re.findall(r"[a-z0-9]+\[[\d,]*\]", shapes_part)
+            else:
+                shapes = re.findall(r"^[a-z0-9]+\[[\d,]*\]", shapes_part)
+            b = sum(_shape_bytes(s) for s in shapes)
+            out[op]["count"] += 1
+            out[op]["bytes"] += b
+            break
+    out["total_bytes"] = sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_tag: str,
+             verbose: bool = True) -> dict:
+    arch = get_arch(arch_id)
+    reason = arch.is_skipped(shape_name)
+    if reason:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_tag,
+                "status": "skipped", "reason": reason}
+    shape = arch.shape(shape_name)
+    t0 = time.time()
+    prog = build_program(arch, shape, mesh)
+    jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
+                     out_shardings=prog.out_shardings,
+                     donate_argnums=prog.donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*prog.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost = dict(cost) if cost else {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)          # naive (loop bodies once)
+    loop_aware = hlo_analysis.analyze(hlo)  # trips-scaled (§Roofline input)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_tag,
+        "status": "ok", "kind": prog.kind,
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+        },
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "collectives_naive": coll,
+        "loop_aware": loop_aware,
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        m = rec["memory_analysis"]
+        print(f"[{mesh_tag}] {arch_id}/{shape_name}: OK "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args/dev {m['argument_size_in_bytes']/2**30:.2f} GiB "
+              f"temp/dev {m['temp_size_in_bytes']/2**30:.2f} GiB | "
+              f"dotflops/dev {loop_aware['dot_flops']:.3e} | "
+              f"coll {loop_aware['collective_bytes']/2**30:.2f} GiB/dev")
+    return rec
+
+
+def save_record(rec: dict, out_dir: str):
+    d = os.path.join(out_dir, rec["mesh"])
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    out_dir = args.out or os.path.abspath(OUT_DIR)
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        tag = "pod2x16x16" if multi else "pod16x16"
+        for arch_id in archs:
+            arch = get_arch(arch_id)
+            shapes = [args.shape] if args.shape else \
+                [s.name for s in arch.shapes]
+            for shape_name in shapes:
+                try:
+                    rec = run_cell(arch_id, shape_name, mesh, tag)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = {"arch": arch_id, "shape": shape_name, "mesh": tag,
+                           "status": "error", "error": repr(e)}
+                    failures.append(f"{tag}/{arch_id}/{shape_name}")
+                save_record(rec, out_dir)
+    if failures:
+        print(f"\nFAILED cells ({len(failures)}):")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("\nall requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=(data,model) single pod; (2,16,16)=(pod,data,model) two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the same axis names (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1

@@ -1,0 +1,468 @@
+"""Program builder: (arch × shape × mesh) -> a lowered-compilable step.
+
+This is the single place that knows how to assemble, for every assigned
+architecture and input shape:
+  - abstract parameters + optimizer state (jax.eval_shape, no allocation),
+  - input ShapeDtypeStructs (`input_specs`, as required by the assignment),
+  - in/out NamedShardings derived from logical axis rules (shardlib),
+  - the step function itself (train_step / prefill / decode / serve /
+    retrieval).
+
+Both launch/dryrun.py (lower+compile on the production meshes) and
+launch/train.py (real execution on the host mesh) consume Programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import shardlib
+from repro.configs.base import ArchSpec
+from repro.models import dlrm as dlrm_lib
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.train.optim import make_optimizer, opt_logical_axes
+from repro.train.train_step import make_train_step
+
+# Logical dims that are "data-like": sharding them when the dim is smaller
+# than the mesh axis would pad (e.g. batch=1 over 32 devices) — drop instead.
+_DATA_DIMS = {"batch", "cache_batch", "candidates", "edges"}
+
+f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Program:
+    name: str                 # "<arch>/<shape>"
+    kind: str                 # train | prefill | decode | serve | retrieval
+    fn: Callable              # step function
+    abstract_args: tuple      # ShapeDtypeStruct pytrees, one per fn arg
+    in_shardings: tuple       # NamedSharding pytrees (or None), same arity
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+# ----------------------------------------------------------------- utils ---
+def abstract_init(init_thunk):
+    """eval_shape a params initializer returning (params, logical).
+
+    `logical` is static python data built during tracing; captured via a
+    side channel because eval_shape outputs must be arrays.
+    """
+    side = {}
+
+    def wrapper():
+        p, lg = init_thunk()
+        side["lg"] = lg
+        return p
+
+    abs_p = jax.eval_shape(wrapper)
+    return abs_p, side["lg"]
+
+
+def _axes_prod(axis, mesh: Mesh) -> int:
+    if axis is None:
+        return 1
+    axes = (axis,) if isinstance(axis, str) else axis
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def shardings_for(abstract_tree, logical_tree, rules, mesh: Mesh):
+    """NamedSharding tree for an abstract pytree (divisible-or-replicate)."""
+    flat_abs, treedef = jax.tree_util.tree_flatten(abstract_tree)
+    flat_lg = treedef.flatten_up_to(logical_tree)
+    out = [NamedSharding(mesh, shardlib.sanitized_pspec(
+        abs_leaf.shape, tuple(lg), rules, mesh))
+        for abs_leaf, lg in zip(flat_abs, flat_lg)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------------------------- LM ----
+def _lm_rules(arch: ArchSpec, shape, mesh):
+    overrides = dict(arch.model.sharding_overrides)
+    if shape.kind == "decode" and shape.batch < 8:
+        # batch unshardable (long_500k): shard the KV cache seq over the
+        # data axes instead (DESIGN.md §5); head_dim already covers `model`
+        # via the arch override when kv heads don't divide.
+        overrides.setdefault("cache_seq", ("pod", "data"))
+    return shardlib.make_rules(overrides)
+
+
+def lm_input_specs(arch: ArchSpec, shape):
+    cfg = arch.model
+    if shape.kind == "train":
+        args = {"tokens": sds((shape.batch, shape.seq_len), i32),
+                "labels": sds((shape.batch, shape.seq_len), i32)}
+        logical = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        return args, logical
+    if shape.kind == "prefill":
+        return ({"tokens": sds((shape.batch, shape.seq_len), i32)},
+                {"tokens": ("batch", "seq")})
+    # decode: cache + one token + position
+    cache = {"k": sds((cfg.n_layers, shape.batch, shape.seq_len,
+                       cfg.n_kv_heads, cfg.head_dim), bf16),
+             "v": sds((cfg.n_layers, shape.batch, shape.seq_len,
+                       cfg.n_kv_heads, cfg.head_dim), bf16)}
+    cache_lg = tfm.cache_logical_axes()
+    args = {"cache": cache, "tokens": sds((shape.batch,), i32),
+            "pos": sds((), i32)}
+    logical = {"cache": cache_lg, "tokens": ("batch",), "pos": ()}
+    return args, logical
+
+
+def build_lm_program(arch: ArchSpec, shape, mesh: Mesh) -> Program:
+    cfg = arch.model
+    rules = _lm_rules(arch, shape, mesh)
+    abs_params, p_logical = abstract_init(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = shardings_for(abs_params, p_logical, rules, mesh)
+    args, args_logical = lm_input_specs(arch, shape)
+    a_shard = shardings_for(args, args_logical, rules, mesh)
+    name = f"{arch.arch_id}/{shape.name}"
+
+    ctx = shardlib.ShardCtx(mesh, rules)
+    if shape.kind == "train":
+        opt = make_optimizer(arch.optimizer, lr=3e-4)
+        abs_opt = jax.eval_shape(opt.init, abs_params)
+        o_logical = opt_logical_axes(arch.optimizer, p_logical,
+                                     params=abs_params)
+        o_shard = shardings_for(abs_opt, o_logical, rules, mesh)
+        loss = lambda p, b: tfm.loss_fn(p, cfg, b, ctx=ctx)
+        step_fn = make_train_step(loss, opt)
+        return Program(
+            name=name, kind="train", fn=step_fn,
+            abstract_args=(abs_params, abs_opt, sds((), i32), args),
+            in_shardings=(p_shard, o_shard, replicated(mesh), a_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+            meta={"params_logical": p_logical, "rules": rules})
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return tfm.prefill(params, cfg, batch["tokens"], ctx=ctx)
+        return Program(
+            name=name, kind="prefill", fn=prefill_fn,
+            abstract_args=(abs_params, args),
+            in_shardings=(p_shard, a_shard),
+            out_shardings=None,
+            meta={"params_logical": p_logical, "rules": rules})
+
+    def decode_fn(params, cache, tokens, pos):
+        return tfm.decode_step(params, cfg, cache, tokens, pos, ctx=ctx)
+    return Program(
+        name=name, kind="decode", fn=decode_fn,
+        abstract_args=(abs_params, args["cache"], args["tokens"],
+                       args["pos"]),
+        in_shardings=(p_shard, a_shard["cache"], a_shard["tokens"],
+                      replicated(mesh)),
+        out_shardings=(None, a_shard["cache"]),
+        donate_argnums=(1,),
+        meta={"params_logical": p_logical, "rules": rules})
+
+
+# ------------------------------------------------------------------ GNN ----
+def padded_edges(n_edges: int, multiple: int = 512) -> int:
+    """Edge counts pad up so the edge axis shards evenly over any mesh
+    (pad edges carry dst == n_nodes, dropped by segment_sum)."""
+    return -(-n_edges // multiple) * multiple
+
+
+def gnn_input_specs(arch: ArchSpec, shape):
+    if shape.kind == "full_graph":
+        e = padded_edges(shape.n_edges)
+        args = {"x": sds((shape.n_nodes, shape.d_feat), f32),
+                "edge_src": sds((e,), i32),
+                "edge_dst": sds((e,), i32),
+                "labels": sds((shape.n_nodes,), i32)}
+        logical = {"x": ("nodes", None), "edge_src": ("edges",),
+                   "edge_dst": ("edges",), "labels": ("nodes",)}
+        return args, logical
+    if shape.kind == "minibatch":
+        b, (f1, f2), d = shape.batch_nodes, shape.fanout, shape.d_feat
+        args = {"x0": sds((b, d), f32), "neigh1": sds((b, f1, d), f32),
+                "neigh2": sds((b, f1, f2, d), f32),
+                "labels": sds((b,), i32)}
+        logical = {"x0": ("batch", None), "neigh1": ("batch", None, None),
+                   "neigh2": ("batch", None, None, None),
+                   "labels": ("batch",)}
+        return args, logical
+    # batched small graphs
+    g, n, e, d = shape.n_graphs, shape.n_nodes, shape.n_edges, shape.d_feat
+    args = {"x": sds((g, n, d), f32), "edge_src": sds((g, e), i32),
+            "edge_dst": sds((g, e), i32), "node_mask": sds((g, n), f32),
+            "labels": sds((g,), i32)}
+    logical = {"x": ("batch", None, None), "edge_src": ("batch", None),
+               "edge_dst": ("batch", None), "node_mask": ("batch", None),
+               "labels": ("batch",)}
+    return args, logical
+
+
+def gnn_partitioned_input_specs(cfg, shape, mesh: Mesh):
+    """dst-partitioned full-graph layout (§Perf hillclimb 3)."""
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    n_pad = -(-shape.n_nodes // 512) * 512       # divides both meshes
+    e_loc = -(-int(shape.n_edges * cfg.partition_slack) // n_shards)
+    e_loc = -(-e_loc // 8) * 8
+    args = {"x": sds((n_pad, shape.d_feat), f32),
+            "edge_src": sds((n_shards, e_loc), i32),
+            "edge_dst": sds((n_shards, e_loc), i32),
+            "labels": sds((n_pad,), i32)}
+    row_axes = axes if len(axes) > 1 else axes[0]
+    P_ = jax.sharding.PartitionSpec
+    shardings = {
+        "x": NamedSharding(mesh, P_(None, None)),
+        "edge_src": NamedSharding(mesh, P_(row_axes, None)),
+        "edge_dst": NamedSharding(mesh, P_(row_axes, None)),
+        "labels": NamedSharding(mesh, P_(row_axes)),
+    }
+    return args, shardings
+
+
+def build_gnn_program(arch: ArchSpec, shape, mesh: Mesh) -> Program:
+    cfg = arch.model
+    rules = shardlib.make_rules(dict(cfg.sharding_overrides))
+    abs_params, p_logical = abstract_init(
+        lambda: gnn_lib.init_params(jax.random.PRNGKey(0), cfg,
+                                    d_feat=shape.d_feat))
+    p_shard = shardings_for(abs_params, p_logical, rules, mesh)
+    partitioned = cfg.partitioned and shape.kind == "full_graph"
+    if partitioned:
+        args, a_shard = gnn_partitioned_input_specs(cfg, shape, mesh)
+    else:
+        args, args_logical = gnn_input_specs(arch, shape)
+        a_shard = shardings_for(args, args_logical, rules, mesh)
+
+    if partitioned:
+        loss = lambda p, c, b: gnn_lib.full_graph_partitioned_loss(
+            p, c, b, mesh)
+    else:
+        loss = {"full_graph": gnn_lib.full_graph_loss,
+                "minibatch": gnn_lib.minibatch_loss,
+                "batched_small": gnn_lib.batched_graphs_loss}[shape.kind]
+    opt = make_optimizer(arch.optimizer, lr=1e-3)
+    abs_opt = jax.eval_shape(opt.init, abs_params)
+    o_logical = opt_logical_axes(arch.optimizer, p_logical, params=abs_params)
+    o_shard = shardings_for(abs_opt, o_logical, rules, mesh)
+    step_fn = make_train_step(lambda p, b: loss(p, cfg, b), opt)
+    return Program(
+        name=f"{arch.arch_id}/{shape.name}", kind="train", fn=step_fn,
+        abstract_args=(abs_params, abs_opt, sds((), i32), args),
+        in_shardings=(p_shard, o_shard, replicated(mesh), a_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+        meta={"params_logical": p_logical, "rules": rules})
+
+
+# --------------------------------------------------------------- recsys ----
+def _recsys_batch_spec(cfg, batch: int, with_label: bool):
+    name = cfg.name
+    if name in ("wide-deep", "xdeepfm"):
+        args = {"sparse_ids": sds((batch, cfg.n_sparse, cfg.multi_hot), i32),
+                "dense": sds((batch, cfg.n_dense), f32)}
+        logical = {"sparse_ids": ("batch", None, None),
+                   "dense": ("batch", None)}
+    elif name == "dien":
+        args = {"hist_ids": sds((batch, cfg.seq_len), i32),
+                "hist_mask": sds((batch, cfg.seq_len), f32),
+                "target_id": sds((batch,), i32),
+                "dense": sds((batch, cfg.n_dense), f32)}
+        logical = {"hist_ids": ("batch", "seq"), "hist_mask": ("batch", "seq"),
+                   "target_id": ("batch",), "dense": ("batch", None)}
+    elif name == "bert4rec":
+        args = {"item_seq": sds((batch, cfg.seq_len), i32)}
+        logical = {"item_seq": ("batch", "seq")}
+        if with_label:
+            args["mask_pos"] = sds((batch, cfg.n_mask), i32)
+            args["mask_labels"] = sds((batch, cfg.n_mask), i32)
+            args["neg_ids"] = sds((batch, cfg.n_mask, cfg.n_negatives), i32)
+            logical["mask_pos"] = ("batch", None)
+            logical["mask_labels"] = ("batch", None)
+            logical["neg_ids"] = ("batch", None, None)
+        return args, logical
+    else:
+        raise ValueError(name)
+    if with_label:
+        args["label"] = sds((batch,), f32)
+        logical["label"] = ("batch",)
+    return args, logical
+
+
+def recsys_input_specs(arch: ArchSpec, shape):
+    cfg = arch.model
+    if shape.kind == "train":
+        return _recsys_batch_spec(cfg, shape.batch, with_label=True)
+    if shape.kind == "serve":
+        return _recsys_batch_spec(cfg, shape.batch, with_label=False)
+    # retrieval: one user + candidate ids
+    user, user_lg = _recsys_batch_spec(cfg, 1, with_label=False)
+    args = {"user": user, "cand_ids": sds((shape.n_candidates,), i32)}
+    logical = {"user": user_lg, "cand_ids": ("candidates",)}
+    return args, logical
+
+
+def build_recsys_program(arch: ArchSpec, shape, mesh: Mesh) -> Program:
+    cfg = arch.model
+    rules = shardlib.make_rules(dict(cfg.sharding_overrides))
+    rec_ctx = shardlib.ShardCtx(mesh, rules)
+    init = recsys_lib.INIT[cfg.name]
+    abs_params, p_logical = abstract_init(
+        lambda: init(jax.random.PRNGKey(0), cfg))
+    p_shard = shardings_for(abs_params, p_logical, rules, mesh)
+    args, args_logical = recsys_input_specs(arch, shape)
+    a_shard = shardings_for(args, args_logical, rules, mesh)
+    name = f"{arch.arch_id}/{shape.name}"
+
+    if cfg.name == "bert4rec":
+        loss_fn = lambda p, b: recsys_lib.bert4rec_loss(p, cfg, b,
+                                                        ctx=rec_ctx)
+        fwd = lambda p, b: recsys_lib.bert4rec_encode(p, cfg, b["item_seq"],
+                                                      ctx=rec_ctx)
+    else:
+        fwd_model = recsys_lib.FORWARD[cfg.name]
+        loss_fn = lambda p, b: recsys_lib.ctr_loss(p, cfg, b, fwd_model,
+                                                   ctx=rec_ctx)
+        if cfg.name in ("wide-deep", "xdeepfm"):
+            fwd = lambda p, b: fwd_model(p, cfg, b, ctx=rec_ctx)
+        else:
+            fwd = lambda p, b: fwd_model(p, cfg, b)
+
+    if shape.kind == "train":
+        opt = make_optimizer(arch.optimizer, lr=1e-2)
+        abs_opt = jax.eval_shape(opt.init, abs_params)
+        o_logical = opt_logical_axes(arch.optimizer, p_logical,
+                                     params=abs_params)
+        o_shard = shardings_for(abs_opt, o_logical, rules, mesh)
+        step_fn = make_train_step(loss_fn, opt)
+        return Program(
+            name=name, kind="train", fn=step_fn,
+            abstract_args=(abs_params, abs_opt, sds((), i32), args),
+            in_shardings=(p_shard, o_shard, replicated(mesh), a_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+            meta={"params_logical": p_logical, "rules": rules})
+
+    if shape.kind == "serve":
+        return Program(
+            name=name, kind="serve", fn=fwd,
+            abstract_args=(abs_params, args),
+            in_shardings=(p_shard, a_shard), out_shardings=None,
+            meta={"params_logical": p_logical, "rules": rules})
+
+    ctx = shardlib.ShardCtx(mesh, rules)
+
+    def retrieval_fn(params, user, cand_ids):
+        # 25 slabs of 40k (divisible by the 32-way dp axis) bound memory
+        return recsys_lib.score_candidates(params, cfg, user, cand_ids,
+                                           chunks=25, ctx=ctx)
+    return Program(
+        name=name, kind="retrieval", fn=retrieval_fn,
+        abstract_args=(abs_params, args["user"], args["cand_ids"]),
+        in_shardings=(p_shard, a_shard["user"], a_shard["cand_ids"]),
+        out_shardings=None,
+        meta={"params_logical": p_logical, "rules": rules})
+
+
+# ----------------------------------------------------------------- DLRM ----
+def dlrm_input_specs(arch: ArchSpec, shape):
+    cfg = arch.model
+    def batch_spec(batch, with_label):
+        args = {"sparse_ids": sds((batch, cfg.n_sparse, cfg.multi_hot), i32),
+                "dense": sds((batch, cfg.n_dense), f32)}
+        logical = {"sparse_ids": ("batch", None, None),
+                   "dense": ("batch", None)}
+        if with_label:
+            args["label"] = sds((batch,), f32)
+            logical["label"] = ("batch",)
+        return args, logical
+    if shape.kind == "train":
+        return batch_spec(shape.batch, True)
+    if shape.kind == "serve":
+        return batch_spec(shape.batch, False)
+    user, user_lg = batch_spec(1, False)
+    return ({"user": user, "cand_ids": sds((shape.n_candidates,), i32)},
+            {"user": user_lg, "cand_ids": ("candidates",)})
+
+
+def build_dlrm_program(arch: ArchSpec, shape, mesh: Mesh) -> Program:
+    cfg = arch.model
+    rules = shardlib.make_rules(dict(cfg.sharding_overrides))
+    dlrm_ctx = shardlib.ShardCtx(mesh, rules)
+    abs_params, p_logical = abstract_init(
+        lambda: dlrm_lib.init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = shardings_for(abs_params, p_logical, rules, mesh)
+    args, args_logical = dlrm_input_specs(arch, shape)
+    a_shard = shardings_for(args, args_logical, rules, mesh)
+    name = f"{arch.arch_id}/{shape.name}"
+
+    if shape.kind == "train":
+        opt = make_optimizer(arch.optimizer, lr=1e-2)
+        abs_opt = jax.eval_shape(opt.init, abs_params)
+        o_logical = opt_logical_axes(arch.optimizer, p_logical,
+                                     params=abs_params)
+        o_shard = shardings_for(abs_opt, o_logical, rules, mesh)
+        step_fn = make_train_step(
+            lambda p, b: dlrm_lib.loss_fn(p, cfg, b, ctx=dlrm_ctx), opt)
+        return Program(
+            name=name, kind="train", fn=step_fn,
+            abstract_args=(abs_params, abs_opt, sds((), i32), args),
+            in_shardings=(p_shard, o_shard, replicated(mesh), a_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+            meta={"params_logical": p_logical, "rules": rules})
+    if shape.kind == "serve":
+        fwd = lambda p, b: dlrm_lib.forward(p, cfg, b, ctx=dlrm_ctx)
+        return Program(
+            name=name, kind="serve", fn=fwd,
+            abstract_args=(abs_params, args),
+            in_shardings=(p_shard, a_shard), out_shardings=None,
+            meta={"params_logical": p_logical, "rules": rules})
+
+    def retrieval_fn(params, user, cand_ids):
+        # user-side embeddings computed once; 40k candidate slabs
+        return dlrm_lib.score_candidates(params, cfg, user, cand_ids,
+                                         chunks=25, ctx=dlrm_ctx)
+    return Program(
+        name=name, kind="retrieval", fn=retrieval_fn,
+        abstract_args=(abs_params, args["user"], args["cand_ids"]),
+        in_shardings=(p_shard, a_shard["user"], a_shard["cand_ids"]),
+        out_shardings=None,
+        meta={"params_logical": p_logical, "rules": rules})
+
+
+# -------------------------------------------------------------- dispatch ---
+BUILDERS = {"lm": build_lm_program, "gnn": build_gnn_program,
+            "recsys": build_recsys_program, "dlrm": build_dlrm_program}
+
+
+def build_program(arch: ArchSpec, shape, mesh: Mesh) -> Program:
+    return BUILDERS[arch.family](arch, shape, mesh)
+
+
+def input_specs(arch: ArchSpec, shape_name: str):
+    """Assignment-required API: ShapeDtypeStruct stand-ins for every input."""
+    shape = arch.shape(shape_name)
+    fn = {"lm": lm_input_specs, "gnn": gnn_input_specs,
+          "recsys": recsys_input_specs, "dlrm": dlrm_input_specs}[arch.family]
+    return fn(arch, shape)[0]

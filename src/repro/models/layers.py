@@ -1,0 +1,280 @@
+"""Shared neural-net layers: norms, RoPE, activations, chunked attention.
+
+Pure JAX (no flax). All attention paths avoid materializing the full
+S x S score matrix: training/prefill use an online-softmax scan over KV
+blocks (flash-attention algorithm in jnp), decode uses direct attention
+(scores are (B, H, 1, S) — small). This is what keeps the compile-time
+memory analysis of the 32k prefill / 4k train cells bounded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-but-finite; avoids NaN from (-inf) - (-inf)
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x, weight, *, eps: float = 1e-6, plus_one: bool = False):
+    """RMSNorm in fp32, cast back to input dtype.
+
+    plus_one=True gives the Gemma convention `x * (1 + w)`.
+    """
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    y = y * (1.0 + w) if plus_one else y * w
+    return y.astype(dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, n_heads, head_dim); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def _group_query(q, n_kv: int):
+    """(B, S, H, hd) -> (B, S, K, G, hd) with H = K * G."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _block_kv(x, chunk: int):
+    """(B, Skv, K, hd) -> (nblk, B, K, chunk, hd), zero-padded tail."""
+    b, skv, n_kv, hd = x.shape
+    nblk = -(-skv // chunk)
+    pad = nblk * chunk - skv
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x.reshape(b, nblk, chunk, n_kv, hd).transpose(1, 0, 3, 2, 4)
+
+
+def _block_mask(blk, chunk, skv, q_pos, causal, window):
+    """(Sq, chunk) validity mask for kv block `blk` (static window)."""
+    kv_pos = blk * chunk + jnp.arange(chunk)
+    valid = kv_pos[None, :] < skv
+    if causal:
+        valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+    if window:
+        valid = valid & (q_pos[:, None] - kv_pos[None, :] < window)
+    return valid
+
+
+def _flash_fwd(q, k, v, window, causal, logit_cap, chunk, scale, q_offset):
+    """Returns (out_f32 (B,K,G,Sq,hd), lse (B,K,G,Sq))."""
+    b, sq, h, hd = q.shape
+    _, skv, n_kv, _ = k.shape
+    g = h // n_kv
+    qg = jnp.swapaxes(_group_query(q, n_kv), 1, 2)   # (B, K, Sq, G, hd)
+    kb, vb = _block_kv(k, chunk), _block_kv(v, chunk)
+    nblk = kb.shape[0]
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, blk = xs
+        s = jnp.einsum("bksgh,bkch->bkgsc", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, logit_cap)
+        valid = _block_mask(blk, chunk, skv, q_pos, causal, window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        upd = jnp.einsum("bkgsc,bkch->bkgsh", p.astype(vblk.dtype), vblk,
+                         preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nblk)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _ungroup(outg, b, sq, h, hd):
+    """(B, K, G, Sq, hd) -> (B, Sq, H, hd)."""
+    outg = jnp.swapaxes(outg, 2, 3)                   # (B, K, Sq, G, hd)
+    outg = jnp.swapaxes(outg, 1, 2)                   # (B, Sq, K, G, hd)
+    return outg.reshape(b, sq, h, hd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, window, causal, logit_cap, chunk, scale, q_offset):
+    out, _ = _flash_fwd(q, k, v, window, causal, logit_cap, chunk, scale,
+                        q_offset)
+    b, sq, h, hd = q.shape
+    return _ungroup(out, b, sq, h, hd).astype(q.dtype)
+
+
+def _flash_vjp_fwd(q, k, v, window, causal, logit_cap, chunk, scale,
+                   q_offset):
+    out, lse = _flash_fwd(q, k, v, window, causal, logit_cap, chunk, scale,
+                          q_offset)
+    b, sq, h, hd = q.shape
+    primal = _ungroup(out, b, sq, h, hd).astype(q.dtype)
+    return primal, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(window, causal, logit_cap, chunk, scale, q_offset,
+                   res, dout):
+    """FlashAttention backward: recompute scores per kv block from saved
+    (q, k, v, out, lse); O(B*K*G*Sq*chunk) live scores only."""
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    _, skv, n_kv, _ = k.shape
+    g = h // n_kv
+    qg = jnp.swapaxes(_group_query(q, n_kv), 1, 2)    # (B,K,Sq,G,hd)
+    dog = jnp.swapaxes(jnp.swapaxes(
+        dout.reshape(b, sq, n_kv, g, hd), 1, 2), 2, 3)  # (B,K,G,Sq,hd) f32?
+    dog = dog.astype(jnp.float32)
+    kb, vb = _block_kv(k, chunk), _block_kv(v, chunk)
+    nblk = kb.shape[0]
+    q_pos = q_offset + jnp.arange(sq)
+    # D_i = sum_d dout_i * out_i  (out saved in f32, pre-cast)
+    dsum = jnp.sum(dog * out, axis=-1)                # (B,K,G,Sq)
+
+    def body(dq_acc, xs):
+        kblk, vblk, blk = xs
+        s_raw = jnp.einsum("bksgh,bkch->bkgsc", qg, kblk,
+                           preferred_element_type=jnp.float32) * scale
+        s = softcap(s_raw, logit_cap)
+        valid = _block_mask(blk, chunk, skv, q_pos, causal, window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])               # (B,K,G,Sq,c)
+        dp = jnp.einsum("bkgsh,bkch->bkgsc", dog, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dsum[..., None])
+        if logit_cap:
+            ds = ds * (1.0 - jnp.square(s / logit_cap))
+        ds = jnp.where(valid[None, None, None], ds, 0.0) * scale
+        dq_blk = jnp.einsum("bkgsc,bkch->bksgh", ds, kblk,
+                            preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bkgsc,bksgh->bkch", ds, qg,
+                            preferred_element_type=jnp.float32)
+        dv_blk = jnp.einsum("bkgsc,bkgsh->bkch", p, dog,
+                            preferred_element_type=jnp.float32)
+        return dq_acc + dq_blk, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, n_kv, sq, g, hd), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nblk)))
+    dq = jnp.swapaxes(dq, 1, 2).reshape(b, sq, h, hd).astype(q.dtype)
+    # (nblk, B, K, c, hd) -> (B, Skv(+pad), K, hd), trim pad
+    def unblock(xb):
+        xb = xb.transpose(1, 0, 3, 2, 4).reshape(b, nblk * chunk, n_kv, hd)
+        return xb[:, :skv]
+    dk = unblock(dk_b).astype(k.dtype)
+    dv = unblock(dv_b).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(q, k, v, *, q_offset: int = 0, window: int = 0,
+                      causal: bool = True, logit_cap: float = 0.0,
+                      chunk: int = 512, scale: Optional[float] = None):
+    """FlashAttention in pure JAX (custom_vjp; never materializes S x S).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, K, hd) with GQA groups G = H // K.
+    `window` is a STATIC python int: > 0 = sliding window, 0 = unbounded.
+    q_offset is the absolute position of q[0].
+    """
+    _, _, _, hd = q.shape
+    scale = scale if scale is not None else hd ** -0.5
+    chunk = min(chunk, k.shape[1])
+    return _flash(q, k, v, int(window), bool(causal), float(logit_cap),
+                  int(chunk), float(scale), int(q_offset))
+
+
+def decode_attention(q, k, v, *, pos, window: int = 0,
+                     logit_cap: float = 0.0, scale: Optional[float] = None):
+    """Single-token attention over a KV cache.
+
+    q: (B, 1, H, hd); k, v: (B, S, K, hd); pos: scalar int32 — index of the
+    token being decoded (cache entries > pos are garbage/unwritten).
+    `window` is a STATIC python int (> 0 = sliding window, 0 = unbounded).
+    Scores are (B, K, G, S): linear in cache length, no chunking needed.
+    """
+    b, sq, h, hd = q.shape
+    assert sq == 1
+    _, s, n_kv, _ = k.shape
+    scale = scale if scale is not None else hd ** -0.5
+    qg = _group_query(q, n_kv)[:, 0]                  # (B, K, G, hd)
+    sc = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                    preferred_element_type=jnp.float32) * scale
+    sc = softcap(sc, logit_cap)
+    kv_pos = jnp.arange(s)
+    valid = kv_pos <= pos
+    if window:
+        valid = valid & (pos - kv_pos < window)
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# -------------------------------------------------------------- linears ----
+def dense(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def mlp_block(x, wi, wg, wo, act_name: str):
+    """Gated MLP (SwiGLU / GeGLU)."""
+    act = activation(act_name)
+    h = act(dense(x, wg)) * dense(x, wi)
+    return dense(h, wo)
+
+
+def cross_entropy_loss(logits, labels, *, final_cap: float = 0.0,
+                       z_loss: float = 0.0):
+    """Mean token cross-entropy in fp32; labels < 0 are masked out."""
+    logits = softcap(logits.astype(jnp.float32), final_cap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,358 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+Features driven entirely by TransformerConfig:
+  - GQA attention (custom_vjp flash — never materializes S x S, forward OR
+    backward),
+  - RoPE, optional QKV bias (Qwen), logit softcaps (Gemma-2),
+  - local/global alternating sliding-window layers (Gemma-2) via a
+    scan-block of 2 layers with STATIC windows,
+  - dense SwiGLU/GeGLU or MoE FFN (shard_map EP, see moe.py),
+  - scan-over-layers with stacked params + configurable remat policy
+    (keeps HLO size O(1) in depth — essential for the 61/64-layer archs),
+  - explicit activation sharding constraints via ShardCtx (scan carries
+    otherwise lose batch sharding under GSPMD),
+  - tied or untied LM head.
+
+Param layout: plain nested dict; every weight stacked over layers on axis 0.
+A parallel "logical axes" tree maps each dim to a sharding rule name
+(common/shardlib.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.shardlib import ShardCtx
+from repro.configs.base import TransformerConfig
+from repro.models import moe as moe_lib
+from repro.models.embedding import tp_embedding_lookup
+from repro.models.layers import (
+    apply_rope, chunked_attention, cross_entropy_loss, decode_attention,
+    mlp_block, rms_norm, softcap)
+
+EXPERT_PAD_TO = 16  # model-axis TP degree on the production mesh
+
+
+def expert_pad(cfg: TransformerConfig) -> int:
+    if not cfg.is_moe:
+        return 0
+    return -(-cfg.n_experts // EXPERT_PAD_TO) * EXPERT_PAD_TO
+
+
+# ------------------------------------------------------------------ init ---
+def init_params(rng, cfg: TransformerConfig):
+    """Returns (params, logical_axes) with layer-stacked weights."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    H, K, hd, F = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    keys = jax.random.split(rng, 12)
+    nrm = lambda k, shape, fan_in: (
+        jax.random.normal(k, shape, dtype) * fan_in ** -0.5)
+
+    ln_init = jnp.zeros if cfg.post_norm else jnp.ones  # gemma: (1+w) conv.
+    params = {
+        "embed": {"table": nrm(keys[0], (V, D), D)},
+        "blocks": {
+            "ln1": ln_init((L, D), dtype),
+            "ln2": ln_init((L, D), dtype),
+            "attn": {
+                "wq": nrm(keys[1], (L, D, H, hd), D),
+                "wk": nrm(keys[2], (L, D, K, hd), D),
+                "wv": nrm(keys[3], (L, D, K, hd), D),
+                "wo": nrm(keys[4], (L, H, hd, D), H * hd),
+            },
+        },
+        "final_ln": ln_init((D,), dtype),
+    }
+    logical = {
+        "embed": {"table": ("vocab", "embed")},
+        "blocks": {
+            "ln1": ("layers", "embed"),
+            "ln2": ("layers", "embed"),
+            "attn": {
+                "wq": ("layers", "fsdp", "heads", "head_dim"),
+                "wk": ("layers", "fsdp", "kv_heads", "head_dim"),
+                "wv": ("layers", "fsdp", "kv_heads", "head_dim"),
+                "wo": ("layers", "heads", "head_dim", "fsdp"),
+            },
+        },
+        "final_ln": ("embed",),
+    }
+    if cfg.qkv_bias:
+        params["blocks"]["attn"]["bq"] = jnp.zeros((L, H, hd), dtype)
+        params["blocks"]["attn"]["bk"] = jnp.zeros((L, K, hd), dtype)
+        params["blocks"]["attn"]["bv"] = jnp.zeros((L, K, hd), dtype)
+        logical["blocks"]["attn"]["bq"] = ("layers", "heads", "head_dim")
+        logical["blocks"]["attn"]["bk"] = ("layers", "kv_heads", "head_dim")
+        logical["blocks"]["attn"]["bv"] = ("layers", "kv_heads", "head_dim")
+    if cfg.post_norm:
+        params["blocks"]["ln1_post"] = ln_init((L, D), dtype)
+        params["blocks"]["ln2_post"] = ln_init((L, D), dtype)
+        logical["blocks"]["ln1_post"] = ("layers", "embed")
+        logical["blocks"]["ln2_post"] = ("layers", "embed")
+    if cfg.is_moe:
+        mp, ml = moe_lib.init_moe_params(
+            keys[5], L, D, expert_pad(cfg), cfg.d_expert,
+            cfg.n_shared_experts, dtype)
+        params["blocks"]["moe"] = mp
+        logical["blocks"]["moe"] = ml
+    else:
+        params["blocks"]["mlp"] = {
+            "wi": nrm(keys[6], (L, D, F), D),
+            "wg": nrm(keys[7], (L, D, F), D),
+            "wo": nrm(keys[8], (L, F, D), F),
+        }
+        logical["blocks"]["mlp"] = {
+            "wi": ("layers", "fsdp", "mlp"),
+            "wg": ("layers", "fsdp", "mlp"),
+            "wo": ("layers", "mlp", "fsdp"),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nrm(keys[9], (D, V), D)
+        logical["lm_head"] = ("embed", "vocab")
+    return params, logical
+
+
+# -------------------------------------------------------------- helpers ----
+def _group_windows(cfg: TransformerConfig) -> Tuple[int, ...]:
+    """STATIC per-sublayer windows within one scan group.
+
+    Gemma-2: scan_block=2, (local W, global 0). Others: (W,) or (0,).
+    The window pattern must be periodic with scan_block — checked here.
+    """
+    if cfg.local_global_alternating:
+        assert cfg.scan_block == 2, "alternation needs scan_block=2"
+        return (cfg.sliding_window, 0)
+    return (cfg.sliding_window,) * cfg.scan_block
+
+
+def _scan_groups(cfg: TransformerConfig) -> int:
+    assert cfg.n_layers % cfg.scan_block == 0, (cfg.n_layers, cfg.scan_block)
+    return cfg.n_layers // cfg.scan_block
+
+
+def _group_params(blocks, cfg: TransformerConfig):
+    """(L, ...) stacked params -> (L/blk, blk, ...)."""
+    blk = cfg.scan_block
+    if blk == 1:
+        return jax.tree_util.tree_map(
+            lambda p: p.reshape((p.shape[0], 1) + p.shape[1:]), blocks)
+    return jax.tree_util.tree_map(
+        lambda p: p.reshape((p.shape[0] // blk, blk) + p.shape[1:]), blocks)
+
+
+def _attn_proj(h, attn_p, cfg, ctx: ShardCtx):
+    q = jnp.einsum("bsd,dhk->bshk", h, attn_p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, attn_p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, attn_p["wv"])
+    if cfg.qkv_bias:
+        q = q + attn_p["bq"]
+        k = k + attn_p["bk"]
+        v = v + attn_p["bv"]
+    q = ctx.cs(q, "batch", "act_q_seq", "act_heads", "act_head_dim")
+    k = ctx.cs(k, "batch", "act_kv_seq", "act_kv_heads", "act_head_dim")
+    v = ctx.cs(v, "batch", "act_kv_seq", "act_kv_heads", "act_head_dim")
+    return q, k, v
+
+
+def _remat(fn, cfg: TransformerConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save nothing, recompute all
+
+
+def _logits(x, params):
+    head = params.get("lm_head")
+    if head is None:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+# -------------------------------------------------------------- forward ----
+def forward(params, cfg: TransformerConfig, tokens, *,
+            ctx: Optional[ShardCtx] = None, return_cache: bool = False):
+    """Full-sequence forward. tokens: (B, S) int32.
+
+    Returns (logits (B, S, V), aux) [, cache dict (L, B, S, K, hd)].
+    """
+    ctx = ctx or ShardCtx()
+    B, S = tokens.shape
+    x = tp_embedding_lookup(params["embed"]["table"], tokens, ctx.mesh)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = ctx.cs(x, "batch", "act_seq", None)
+    positions = jnp.arange(S)
+    windows = _group_windows(cfg)
+    plus1 = cfg.post_norm  # gemma-style (1+w) norms
+    e_pad = expert_pad(cfg)
+
+    def one_layer(x, blk, window: int):
+        h = rms_norm(x, blk["ln1"], eps=cfg.norm_eps, plus_one=plus1)
+        q, k, v = _attn_proj(h, blk["attn"], cfg, ctx)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = chunked_attention(
+            q, k, v, window=window, causal=True,
+            logit_cap=cfg.attn_logit_softcap, chunk=cfg.attn_chunk,
+            scale=cfg.head_dim ** -0.5)
+        o = ctx.cs(o, "batch", "act_q_seq", "act_heads", "act_head_dim")
+        o = jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"])
+        if cfg.post_norm:
+            o = rms_norm(o, blk["ln1_post"], eps=cfg.norm_eps, plus_one=True)
+        x = ctx.cs(x + o, "batch", "act_seq", None)
+        h2 = rms_norm(x, blk["ln2"], eps=cfg.norm_eps, plus_one=plus1)
+        if cfg.is_moe:
+            m, aux = moe_lib.moe_ffn(h2, blk["moe"], cfg, ctx.mesh, e_pad)
+        else:
+            m = mlp_block(h2, blk["mlp"]["wi"], blk["mlp"]["wg"],
+                          blk["mlp"]["wo"], cfg.act)
+            aux = jnp.zeros((), jnp.float32)
+        if cfg.post_norm:
+            m = rms_norm(m, blk["ln2_post"], eps=cfg.norm_eps, plus_one=True)
+        x = ctx.cs(x + m, "batch", "act_seq", None)
+        return x, aux, (k, v)
+
+    grouped = _group_params(params["blocks"], cfg)
+
+    def body(carry, group):
+        x, aux_sum = carry
+        kvs = []
+        for j in range(cfg.scan_block):
+            blk = jax.tree_util.tree_map(lambda p: p[j], group)
+            x, aux, kv = one_layer(x, blk, windows[j])
+            aux_sum = aux_sum + aux
+            kvs.append(kv)
+        ys = (jnp.stack([k for k, _ in kvs]),
+              jnp.stack([v for _, v in kvs])) if return_cache else None
+        return (x, aux_sum), ys
+
+    body = _remat(body, cfg)
+    (x, aux_total), kvs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), grouped)
+
+    x = rms_norm(x, params["final_ln"], eps=cfg.norm_eps, plus_one=plus1)
+    logits = _logits(x, params)
+    logits = ctx.cs(logits, "batch", None, "act_vocab")
+    if return_cache:
+        # kvs: (groups, blk, B, S, K, hd) -> (L, B, S, K, hd)
+        cache = {
+            "k": kvs[0].reshape((cfg.n_layers,) + kvs[0].shape[2:]),
+            "v": kvs[1].reshape((cfg.n_layers,) + kvs[1].shape[2:]),
+        }
+        return logits, cache, aux_total
+    return logits, aux_total
+
+
+def loss_fn(params, cfg: TransformerConfig, batch, *,
+            ctx: Optional[ShardCtx] = None):
+    """batch: {"tokens": (B, S), "labels": (B, S)}. Returns (loss, metrics)."""
+    logits, aux = forward(params, cfg, batch["tokens"], ctx=ctx)
+    xent = cross_entropy_loss(logits, batch["labels"],
+                              final_cap=cfg.final_logit_softcap)
+    loss = xent + cfg.router_aux_coef * aux
+    return loss, {"xent": xent, "router_aux": aux}
+
+
+# -------------------------------------------------------------- serving ----
+def init_cache(cfg: TransformerConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_logical_axes():
+    return {"k": ("layers", "cache_batch", "cache_seq", "cache_kv_heads",
+                  "cache_head_dim"),
+            "v": ("layers", "cache_batch", "cache_seq", "cache_kv_heads",
+                  "cache_head_dim")}
+
+
+def prefill(params, cfg: TransformerConfig, tokens, *,
+            ctx: Optional[ShardCtx] = None):
+    """Prefill: forward over the prompt, return last-token logits + cache."""
+    logits, cache, _ = forward(params, cfg, tokens, ctx=ctx,
+                               return_cache=True)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens, pos, *,
+                ctx: Optional[ShardCtx] = None):
+    """One decode step. tokens: (B,) int32; pos: scalar int32 (same for the
+    whole batch — continuous batching handled a level above).
+
+    Returns (logits (B, V), new cache).
+    """
+    ctx = ctx or ShardCtx()
+    B = tokens.shape[0]
+    x = tp_embedding_lookup(params["embed"]["table"], tokens,
+                            ctx.mesh)[:, None, :]     # (B, 1, D)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    windows = _group_windows(cfg)
+    plus1 = cfg.post_norm
+    e_pad = expert_pad(cfg)
+    pos_arr = jnp.asarray(pos)[None]
+
+    def one_layer(x, blk, window, k_l, v_l):
+        h = rms_norm(x, blk["ln1"], eps=cfg.norm_eps, plus_one=plus1)
+        q, k, v = _attn_proj(h, blk["attn"], cfg, ctx)
+        q = apply_rope(q, pos_arr, cfg.rope_theta)
+        k = apply_rope(k, pos_arr, cfg.rope_theta)
+        k_l = jax.lax.dynamic_update_slice(
+            k_l, k.astype(k_l.dtype), (0, pos, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(
+            v_l, v.astype(v_l.dtype), (0, pos, 0, 0))
+        k_l = ctx.cs(k_l, "cache_batch", "cache_seq", "cache_kv_heads",
+                     "cache_head_dim")
+        v_l = ctx.cs(v_l, "cache_batch", "cache_seq", "cache_kv_heads",
+                     "cache_head_dim")
+        o = decode_attention(q, k_l, v_l, pos=pos, window=window,
+                             logit_cap=cfg.attn_logit_softcap,
+                             scale=cfg.head_dim ** -0.5)
+        o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), blk["attn"]["wo"])
+        if cfg.post_norm:
+            o = rms_norm(o, blk["ln1_post"], eps=cfg.norm_eps, plus_one=True)
+        x = x + o
+        h2 = rms_norm(x, blk["ln2"], eps=cfg.norm_eps, plus_one=plus1)
+        if cfg.is_moe:
+            m, _ = moe_lib.moe_ffn(h2, blk["moe"], cfg, ctx.mesh, e_pad)
+        else:
+            m = mlp_block(h2, blk["mlp"]["wi"], blk["mlp"]["wg"],
+                          blk["mlp"]["wo"], cfg.act)
+        if cfg.post_norm:
+            m = rms_norm(m, blk["ln2_post"], eps=cfg.norm_eps, plus_one=True)
+        return ctx.cs(x + m, "cache_batch", None, None), k_l, v_l
+
+    grouped = _group_params(params["blocks"], cfg)
+    blk_sz = cfg.scan_block
+
+    def regroup(c):
+        return c.reshape((cfg.n_layers // blk_sz, blk_sz) + c.shape[1:])
+
+    def body(x, xs):
+        group, k_g, v_g = xs
+        k_out, v_out = [], []
+        for j in range(blk_sz):
+            blk = jax.tree_util.tree_map(lambda p: p[j], group)
+            x, k_l, v_l = one_layer(x, blk, windows[j], k_g[j], v_g[j])
+            k_out.append(k_l)
+            v_out.append(v_l)
+        return x, (jnp.stack(k_out), jnp.stack(v_out))
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (grouped, regroup(cache["k"]), regroup(cache["v"])))
+    x = rms_norm(x, params["final_ln"], eps=cfg.norm_eps, plus_one=plus1)
+    logits = _logits(x, params)
+    logits = softcap(logits[:, 0].astype(jnp.float32),
+                     cfg.final_logit_softcap)
+    new_cache = {
+        "k": new_k.reshape((cfg.n_layers,) + new_k.shape[2:]),
+        "v": new_v.reshape((cfg.n_layers,) + new_v.shape[2:]),
+    }
+    return logits, new_cache

@@ -1,0 +1,54 @@
+"""Explicit collectives: gradient compression for the DP all-reduce.
+
+GSPMD inserts data-parallel grad reductions automatically, but those are
+always full-precision. This module provides the explicit path (used by
+train/dp_trainer.py inside shard_map) where the all-reduce payload can be
+compressed:
+
+  "none"  : fp32/bf16 psum as-is
+  "bf16"  : cast fp32 grads to bf16 before psum (2x bytes saved; psum in
+            bf16 accumulates in bf16 on-wire — the standard trade)
+  "int8"  : per-tensor symmetric int8 quantization + all_gather + local
+            dequant-sum (4x payload reduction per hop; exact mean of the
+            quantized values — no int overflow since the sum is in fp32)
+
+The collective-bytes effect is measurable in the lowered HLO, which is how
+benchmarks/collectives_bench.py scores it.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def psum_tree(tree, axes, *, compress: str = "none", mean: bool = True):
+    """All-reduce a grad pytree over `axes` (inside shard_map)."""
+    axes = tuple(axes)
+    n = 1
+    for a in axes:
+        n *= jax.lax.axis_size(a)
+
+    def reduce_leaf(g):
+        if compress == "bf16" and g.dtype == jnp.float32:
+            r = jax.lax.psum(g.astype(jnp.bfloat16), axes).astype(jnp.float32)
+        elif compress == "int8":
+            q, scale = _quantize_int8(g.astype(jnp.float32))
+            qs = jax.lax.all_gather(q, axes, tiled=False)     # (n, ...)
+            ss = jax.lax.all_gather(scale, axes, tiled=False)  # (n,)
+            shape = (-1,) + (1,) * g.ndim
+            r = jnp.sum(qs.reshape((qs.shape[0],) + g.shape).astype(jnp.float32)
+                        * ss.reshape(shape), axis=0)
+        else:
+            r = jax.lax.psum(g, axes)
+        return r / n if mean else r
+
+    return jax.tree_util.tree_map(reduce_leaf, tree)

@@ -1,0 +1,84 @@
+"""Elastic scaling: rebuild meshes from survivors, reshard state.
+
+Failure model: a job starts on H hosts; some die or new ones arrive (the
+paper's machine-resize scenario, Fig. 5C, applied to the compute side).
+Recovery = pick the largest valid mesh from the survivor count, reshard
+the checkpointed state onto it, re-split data-pipeline file shards, and
+let each host's InTune controller re-tune its ingestion pipeline for the
+new CPU pool (that last part is automatic — it's the paper's entire point).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def viable_mesh_shape(n_devices: int, *, model_parallel: int = 16,
+                      min_model: int = 1) -> Tuple[int, ...]:
+    """Largest (data, model) grid using <= n_devices devices.
+
+    Keeps the model axis as large as the parallelism plan allows (TP degree
+    is a property of the param shapes), shrinking it only when too few
+    devices survive; the data axis absorbs the rest (power of two).
+    """
+    tp = model_parallel
+    while tp > min_model and tp > n_devices:
+        tp //= 2
+    dp = max(1, 2 ** int(np.log2(max(n_devices // tp, 1))))
+    return (dp, tp)
+
+
+def make_mesh_from_devices(devices: Sequence, shape: Tuple[int, int],
+                           axis_names=("data", "model")) -> Mesh:
+    dp, tp = shape
+    dev = np.asarray(devices[: dp * tp]).reshape(dp, tp)
+    return Mesh(dev, axis_names)
+
+
+def reshard(tree, specs_tree, new_mesh: Mesh):
+    """Move a (host-local numpy or jax) pytree onto new_mesh shardings."""
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+    return jax.tree_util.tree_map(
+        place, tree, specs_tree,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+
+
+def split_file_shards(files: Sequence[str], n_hosts: int,
+                      host_id: int) -> list:
+    """Deterministic re-split of dataset files over surviving hosts."""
+    return [f for i, f in enumerate(sorted(files)) if i % n_hosts == host_id]
+
+
+class ElasticCoordinator:
+    """Tracks resize events and produces recovery plans.
+
+    In a real deployment the resize signal comes from the cluster scheduler;
+    here it is injected by tests/benchmarks (the paper injects it manually
+    too: 32 -> 64 -> 128 -> 64 -> 32 CPUs).
+    """
+
+    def __init__(self, n_devices: int, model_parallel: int = 16):
+        self.model_parallel = model_parallel
+        self.history: list[Tuple[int, Tuple[int, int]]] = []
+        self.resize(n_devices)
+
+    def resize(self, n_devices: int) -> Tuple[int, int]:
+        shape = viable_mesh_shape(
+            n_devices, model_parallel=self.model_parallel)
+        self.current = shape
+        self.history.append((n_devices, shape))
+        return shape
+
+    def recovery_plan(self, n_survivors: int) -> dict:
+        shape = self.resize(n_survivors)
+        return {
+            "mesh_shape": shape,
+            "devices_used": shape[0] * shape[1],
+            "devices_idle": n_survivors - shape[0] * shape[1],
+            "action": "restore latest checkpoint; reshard params/opt state;"
+                      " re-split data files; InTune re-tunes pipelines",
+        }

@@ -1,0 +1,151 @@
+"""Data substrate: executor threads, synthetic streams, GNN sampler,
+device feed, embedding helpers."""
+import queue
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.executor import ThreadedPipeline
+from repro.data.pipeline import criteo_pipeline
+from repro.data.sampler import CSRGraph, NeighborSampler
+from repro.data.synthetic import CriteoStream, TokenStream, bert4rec_batch
+from repro.data.device_feed import device_prefetch, shard_slice
+from repro.models import embedding as emb
+
+
+def test_threaded_pipeline_end_to_end():
+    spec = criteo_pipeline()
+    stream = CriteoStream(n_sparse=4, n_dense=3, vocab=1024, seed=0)
+    count = {"n": 0}
+
+    def source():
+        if count["n"] >= 12:
+            return None
+        count["n"] += 1
+        return stream.raw_block(8)
+
+    rng = np.random.RandomState(0)
+    pipe = ThreadedPipeline(
+        spec, source,
+        [lambda b: CriteoStream.shuffle_udf(b, rng),
+         stream.feature_udf,
+         CriteoStream.batch_udf,
+         lambda b: b],          # prefetch = pass-through into final queue
+        queue_depth=4, item_mb=1.0)
+    got = []
+    try:
+        for _ in range(12):
+            got.append(pipe.get_batch(timeout=20))
+    finally:
+        pipe.stop()
+    assert len(got) == 12
+    for b in got:
+        assert b["sparse_ids"].shape == (8, 4, 1)
+        assert b["sparse_ids"].max() < 1024
+        assert np.isfinite(b["dense"]).all()
+    stats = pipe.stats()
+    assert len(stats["workers"]) == spec.n_stages
+
+
+def test_executor_resize():
+    spec = criteo_pipeline()
+    pipe = ThreadedPipeline(spec, lambda: None,
+                            [lambda b: b] * 4, item_mb=1.0)
+    pipe.set_allocation([3, 2, 4, 1, 2], prefetch_mb=512)
+    time.sleep(0.05)
+    assert pipe.worker_counts() == [3, 2, 4, 1, 2]
+    pipe.set_allocation([1, 1, 1, 1, 1], prefetch_mb=128)
+    time.sleep(0.2)
+    assert pipe.worker_counts() == [1, 1, 1, 1, 1]
+    pipe.stop()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_nodes=st.integers(5, 200), n_edges=st.integers(10, 800),
+       fanout=st.integers(1, 8))
+def test_sampler_neighbors_are_adjacent(n_nodes, n_edges, fanout):
+    rng = np.random.RandomState(n_nodes)
+    src = rng.randint(0, n_nodes, n_edges)
+    dst = rng.randint(0, n_nodes, n_edges)
+    g = CSRGraph(n_nodes, src, dst)
+    adj = {}
+    for s, d in zip(src, dst):
+        adj.setdefault(d, set()).add(s)
+    nodes = rng.randint(0, n_nodes, 20)
+    out = g.sample_neighbors(nodes, fanout, rng)
+    assert out.shape == (20, fanout)
+    for node, nbrs in zip(nodes, out):
+        allowed = adj.get(node, {node}) | {node}
+        assert set(nbrs.tolist()) <= allowed
+
+
+def test_neighbor_sampler_blocks():
+    g = CSRGraph.random(100, 500, seed=1)
+    x = np.random.RandomState(0).randn(100, 7).astype(np.float32)
+    y = np.random.RandomState(1).randint(0, 3, 100)
+    s = NeighborSampler(g, x, y, fanout=(4, 3))
+    b = s.sample(16)
+    assert b["x0"].shape == (16, 7)
+    assert b["neigh1"].shape == (16, 4, 7)
+    assert b["neigh2"].shape == (16, 4, 3, 7)
+    assert b["labels"].shape == (16,)
+
+
+def test_criteo_stream_udfs():
+    stream = CriteoStream(n_sparse=5, n_dense=4, vocab=512, multi_hot=2)
+    block = stream.raw_block(32)
+    out = stream.feature_udf(block)
+    assert out["sparse_ids"].shape == (32, 5, 2)
+    assert out["sparse_ids"].min() >= 0 and out["sparse_ids"].max() < 512
+    assert abs(out["dense"].mean()) < 0.2     # normalized
+
+
+def test_device_prefetch_order():
+    batches = [{"x": np.full((2,), i)} for i in range(7)]
+    out = list(device_prefetch(iter(batches), depth=3))
+    assert len(out) == 7
+    for i, b in enumerate(out):
+        assert int(b["x"][0]) == i
+
+
+def test_shard_slice():
+    batch = {"x": np.arange(12).reshape(12, 1)}
+    s1 = shard_slice(batch, 1, 4)
+    np.testing.assert_array_equal(s1["x"][:, 0], [3, 4, 5])
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(2, 1 << 20), n=st.integers(1, 64))
+def test_hash_ids_in_range(rows, n):
+    rng = np.random.RandomState(n)
+    raw = jnp.asarray(rng.randint(0, 1 << 31, n), jnp.int32)
+    h = emb.hash_ids(raw, rows)
+    assert int(h.min()) >= 0 and int(h.max()) < rows
+
+
+def test_ragged_embedding_bag():
+    rng = np.random.RandomState(0)
+    table = jnp.asarray(rng.randn(64, 8), jnp.float32)
+    ids = jnp.asarray([1, 2, 3, 10, 11, 40], jnp.int32)
+    seg = jnp.asarray([0, 0, 0, 1, 1, 2], jnp.int32)
+    out = emb.ragged_embedding_bag(table, ids, seg, 4)
+    exp0 = np.asarray(table)[[1, 2, 3]].sum(0)
+    np.testing.assert_allclose(np.asarray(out[0]), exp0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[3]), np.zeros(8), atol=0)
+    mean = emb.ragged_embedding_bag(table, ids, seg, 4, combiner="mean")
+    np.testing.assert_allclose(np.asarray(mean[0]), exp0 / 3, rtol=1e-6)
+
+
+def test_tp_embedding_matches_take_on_host_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.RandomState(0)
+    table = jnp.asarray(rng.randn(32, 4), jnp.float32)
+    ids = jnp.asarray(rng.randint(0, 32, (6, 3)), jnp.int32)
+    out = emb.tp_embedding_lookup(table, ids, mesh)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.take(table, ids, axis=0)),
+                               rtol=1e-6)

@@ -1,0 +1,75 @@
+"""launch/programs unit tests: input_specs shapes, collective parsing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.launch import programs
+from repro.launch.dryrun import parse_collectives, _shape_bytes
+
+
+def test_all_archs_registered():
+    archs = list_archs()
+    assert len(archs) == 11
+    for a in archs:
+        spec = get_arch(a)
+        assert len(spec.shapes) == 4
+
+
+def test_lm_input_specs():
+    arch = get_arch("gemma2-2b")
+    specs = programs.input_specs(arch, "train_4k")
+    assert specs["tokens"].shape == (256, 4096)
+    specs = programs.input_specs(arch, "decode_32k")
+    assert specs["cache"]["k"].shape == (26, 128, 32768, 4, 256)
+    assert specs["tokens"].shape == (128,)
+    specs = programs.input_specs(arch, "long_500k")
+    assert specs["cache"]["k"].shape == (26, 1, 524288, 4, 256)
+
+
+def test_gnn_input_specs_pad_edges():
+    arch = get_arch("graphsage-reddit")
+    specs = programs.input_specs(arch, "ogb_products")
+    e = specs["edge_src"].shape[0]
+    assert e % 512 == 0 and e >= 61859140
+    specs = programs.input_specs(arch, "minibatch_lg")
+    assert specs["neigh2"].shape == (1024, 15, 10, 602)
+
+
+def test_recsys_input_specs():
+    arch = get_arch("bert4rec")
+    specs = programs.input_specs(arch, "train_batch")
+    assert specs["item_seq"].shape == (65536, 200)
+    assert specs["neg_ids"].shape == (65536, 20, 127)
+    specs = programs.input_specs(arch, "retrieval_cand")
+    assert specs["cand_ids"].shape == (1_000_000,)
+
+
+def test_skipped_cells_documented():
+    skipped = {(a, s[0]) for a in list_archs()
+               for s in get_arch(a).skipped_shapes}
+    assert ("qwen2.5-32b", "long_500k") in skipped
+    assert ("gemma2-2b", "long_500k") not in skipped  # hybrid: runs
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[4,8]") == 64
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("pred[3,3]") == 9
+
+
+def test_parse_collectives():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %x), dimensions={0}
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %y), to_apply=%sum
+  %t = (f32[4]{0}, f32[4]{0}) all-to-all(f32[4]{0} %a, f32[4]{0} %b)
+  %rs = f32[2,4]{1,0} reduce-scatter(f32[8,4]{1,0} %z), dimensions={0}
+  %nota = f32[2] add(f32[2] %p, f32[2] %q)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 8 * 128 * 2
+    assert out["all-reduce"]["bytes"] == 256
+    assert out["all-to-all"]["bytes"] == 32
+    assert out["reduce-scatter"]["bytes"] == 32
+    assert out["total_bytes"] == 8 * 128 * 2 + 256 + 32 + 32

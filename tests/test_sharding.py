@@ -1,0 +1,77 @@
+"""shardlib property tests + elastic mesh planning."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.common import shardlib
+from repro.train.elastic import ElasticCoordinator, viable_mesh_shape
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@settings(max_examples=60, deadline=None)
+@given(dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       names=st.lists(st.sampled_from(
+           ["batch", "vocab", "mlp", "fsdp", "heads", None]),
+           min_size=1, max_size=4))
+def test_sanitized_pspec_always_divisible(dims, names):
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    rules = shardlib.make_rules()
+    for mesh in (MESH, MESH3):
+        spec = shardlib.sanitized_pspec(dims, names, rules, mesh)
+        used = []
+        for dim, axis in zip(dims, tuple(spec) + (None,) * 10):
+            if axis is None:
+                continue
+            axes = (axis,) if isinstance(axis, str) else axis
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+                used.append(a)
+            assert dim % prod == 0       # never uneven
+        assert len(used) == len(set(used))  # each mesh axis at most once
+
+
+def test_pod_axis_filtered_on_single_pod():
+    rules = shardlib.make_rules()
+    spec = shardlib.sanitized_pspec((256, 128), ("batch", None), rules, MESH)
+    assert spec == P("data", None)
+    spec3 = shardlib.sanitized_pspec((256, 128), ("batch", None), rules,
+                                     MESH3)
+    assert spec3 == P(("pod", "data"), None)
+
+
+def test_overrides_apply():
+    rules = shardlib.make_rules({"heads": None, "head_dim": "model"})
+    spec = shardlib.sanitized_pspec((512, 9, 64), ("fsdp", "heads",
+                                                   "head_dim"), rules, MESH)
+    assert spec == P("data", None, "model")
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 2048))
+def test_viable_mesh_shape_fits(n):
+    dp, tp = viable_mesh_shape(n, model_parallel=16)
+    assert dp * tp <= n or (dp == 1 and tp <= 16)
+    assert dp & (dp - 1) == 0            # power of two
+    assert tp <= 16
+
+
+def test_elastic_coordinator_plans():
+    coord = ElasticCoordinator(n_devices=256, model_parallel=16)
+    assert coord.current == (16, 16)
+    plan = coord.recovery_plan(200)      # lost 56 devices
+    assert plan["mesh_shape"][0] * plan["mesh_shape"][1] <= 200
+    plan = coord.recovery_plan(8)        # catastrophic loss
+    assert plan["mesh_shape"][1] <= 8

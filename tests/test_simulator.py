@@ -1,0 +1,83 @@
+"""Property-based tests of the pipeline simulator invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import (criteo_pipeline, make_pipeline,
+                                 stage_throughput)
+from repro.data.simulator import (Allocation, MachineSpec, PipelineSim,
+                                  OOM_RESTART_TICKS)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 1000), n_stages=st.integers(3, 6))
+def test_throughput_is_bottleneck(seed, n_stages):
+    spec = make_pipeline(n_stages, seed=seed)
+    sim = PipelineSim(spec, MachineSpec())
+    rng = np.random.RandomState(seed)
+    alloc = Allocation(rng.randint(1, 20, size=n_stages))
+    rates = sim.stage_rates(alloc)
+    assert sim.throughput(alloc) == pytest.approx(min(rates))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 1000), stage=st.integers(0, 4),
+       w=st.integers(1, 60))
+def test_stage_rate_monotone_in_workers(seed, stage, w):
+    spec = make_pipeline(5, seed=seed)
+    st_ = spec.stages[stage]
+    assert stage_throughput(st_, w + 1) >= stage_throughput(st_, w)
+    # and concave-ish: marginal gain shrinks
+    g1 = stage_throughput(st_, w + 1) - stage_throughput(st_, w)
+    g2 = stage_throughput(st_, w + 2) - stage_throughput(st_, w + 1)
+    assert g2 <= g1 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_oracle_dominates_random(seed):
+    spec = make_pipeline(5, seed=seed)
+    machine = MachineSpec(n_cpus=64)
+    sim = PipelineSim(spec, machine)
+    _, best = sim.best_allocation()
+    rng = np.random.RandomState(seed)
+    for _ in range(5):
+        w = rng.randint(1, 16, size=5)
+        if w.sum() > machine.n_cpus:
+            continue
+        assert sim.throughput(Allocation(w)) <= best + 1e-9
+
+
+def test_oom_restart_window():
+    spec = criteo_pipeline()
+    sim = PipelineSim(spec, MachineSpec(mem_mb=4096))
+    # allocation whose prefetch blows the memory cap
+    alloc = Allocation(np.ones(5, dtype=int), prefetch_mb=1e6)
+    m = sim.apply(alloc)
+    assert m["oom"] and m["throughput"] == 0.0
+    ok = Allocation(np.ones(5, dtype=int), prefetch_mb=64)
+    for _ in range(OOM_RESTART_TICKS):
+        m = sim.apply(ok)
+        assert m["throughput"] == 0.0   # still restarting
+    m = sim.apply(ok)
+    assert m["throughput"] > 0          # recovered
+
+
+def test_oversubscription_slows_down():
+    spec = criteo_pipeline()
+    sim = PipelineSim(spec, MachineSpec(n_cpus=16))
+    small = Allocation(np.full(5, 3))    # 15 <= 16
+    big = Allocation(np.full(5, 32))     # 160 > 16 -> scaled down
+    t_small = sim.apply(small)["throughput"]
+    t_big = sim.apply(big)["throughput"]
+    assert t_big < sim.throughput(big)   # penalty applied
+
+
+def test_resize_changes_capacity():
+    spec = criteo_pipeline()
+    sim = PipelineSim(spec, MachineSpec(n_cpus=128))
+    a128, t128 = sim.best_allocation()
+    sim.resize(32)
+    a32, t32 = sim.best_allocation()
+    assert t32 < t128
+    assert a32.workers.sum() <= 32

@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests for the InTune system.
+
+The paper's headline claims, verified against the calibrated simulator:
+  1. InTune reaches higher throughput than AUTOTUNE-like tooling,
+  2. InTune never OOMs while AUTOTUNE-like OOMs at a nonzero rate,
+  3. InTune adapts to machine resizes without relaunch,
+  4. convergence happens within the tuning window (paper: ~10 minutes).
+"""
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.controller import InTune
+from repro.core.pretrain import pretrain
+from repro.data.pipeline import criteo_pipeline
+from repro.data.simulator import MachineSpec, PipelineSim
+
+
+@pytest.fixture(scope="module")
+def pretrained_agent():
+    # offline pass (full pass lives in core/pretrain.py __main__); the
+    # factored branching head converges fastest (beyond-paper variant,
+    # benchmarks cover the paper-faithful joint head too)
+    return pretrain(5, episodes=30, ticks=250, verbose=False,
+                    head="factored")
+
+
+@pytest.fixture(scope="module")
+def setting():
+    return criteo_pipeline(), MachineSpec(n_cpus=128, mem_mb=65536)
+
+
+def steady_throughput(spec, machine, alloc) -> float:
+    return PipelineSim(spec, machine).apply(alloc)["throughput"]
+
+
+def test_intune_beats_autotune(pretrained_agent, setting):
+    spec, machine = setting
+    tuner = InTune(spec, machine, seed=1, head="factored",
+                   pretrained=pretrained_agent.state_dict(),
+                   finetune_ticks=300)
+    hist = tuner.run(600)
+    intune_tput = np.mean([h["throughput"] for h in hist[-100:]])
+    # autotune mean includes its OOM-crashed runs (the paper compares
+    # achieved training throughput, failures included)
+    at_tputs = [steady_throughput(spec, machine,
+                                  B.autotune_like(spec, machine, s))
+                for s in range(30)]
+    assert intune_tput > np.mean(at_tputs) * 1.05
+    assert tuner.env.sim.oom_count == 0
+
+
+def test_autotune_ooms_sometimes(setting):
+    spec, machine = setting
+    ooms = sum(PipelineSim(spec, machine).apply(
+        B.autotune_like(spec, machine, s))["oom"] for s in range(100))
+    assert 1 <= ooms <= 30   # paper: ~8%
+
+
+def test_intune_adapts_to_resize(pretrained_agent, setting):
+    spec, machine = setting
+    tuner = InTune(spec, machine, seed=2, head="factored",
+                   pretrained=pretrained_agent.state_dict(),
+                   finetune_ticks=200)
+    tuner.run(400)
+    base = np.mean([h["throughput"] for h in tuner.history[-50:]])
+    tuner.resize(64)
+    tuner.run(400)
+    small = np.mean([h["throughput"] for h in tuner.history[-50:]])
+    tuner.resize(128)
+    tuner.run(400)
+    back = np.mean([h["throughput"] for h in tuner.history[-50:]])
+    # shrinking reduces throughput; growing recovers most of it without any
+    # relaunch (the paper's Fig. 5C failure mode for AUTOTUNE)
+    assert small < base
+    assert back > small * 1.2
+    assert tuner.env.sim.oom_count == 0
+
+
+def test_ordering_matches_paper(setting):
+    """unoptimized < autotune-like < heuristic/plumber <= oracle."""
+    spec, machine = setting
+    t = {}
+    t["unopt"] = steady_throughput(spec, machine,
+                                   B.unoptimized(spec, machine))
+    t["auto"] = np.mean([steady_throughput(
+        spec, machine, B.autotune_like(spec, machine, s))
+        for s in range(20)])
+    t["even"] = steady_throughput(spec, machine,
+                                  B.heuristic_even(spec, machine))
+    t["oracle"] = steady_throughput(spec, machine,
+                                    B.oracle(spec, machine))
+    assert t["unopt"] < t["auto"] < t["even"] <= t["oracle"]
