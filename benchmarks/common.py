@@ -70,11 +70,75 @@ def run_static(spec, machine, alloc, ticks: int, *, resizes=None,
             "caps": [resizes.get(t, None) for t in range(ticks)]}
 
 
+def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
+                  seed: int = 0, relaunch_dead: int = 0):
+    """Drive any Optimizer-protocol policy against one authoritative sim.
+
+    The generic loop the protocol exists for: propose -> apply -> observe.
+    `relaunch_dead` > 0 charges the *-Adaptive relaunch window whenever a
+    static policy changes its proposal after a resize (learning policies
+    re-allocate live and should pass 0).
+    """
+    sim = PipelineSim(spec, machine, seed=seed)
+    resizes = dict(resizes or [])
+    tput, used, mem = [], [], []
+    dead = 0
+    prev = None
+    for t in range(ticks):
+        if t in resizes:
+            sim.resize(resizes[t])
+        alloc = opt.propose(spec, sim.machine)
+        changed = prev is not None and (
+            not np.array_equal(alloc.workers, prev.workers)
+            or alloc.prefetch_mb != prev.prefetch_mb)
+        if relaunch_dead and changed:
+            dead = relaunch_dead
+        prev = alloc
+        if dead > 0:
+            dead -= 1
+            sim.time += 1
+            # relaunch window: the pipeline process is down, matching
+            # run_static's dead-window accounting
+            m = {"throughput": 0.0, "mem_mb": 0.0, "oom": False,
+                 "restarting": True, "used_cpus": 0}
+        else:
+            m = sim.apply(alloc)
+        opt.observe(m)
+        tput.append(m["throughput"])
+        used.append(min(m["used_cpus"], sim.machine.n_cpus))
+        mem.append(m["mem_mb"])
+    return {"throughput": tput, "used_cpus": used, "mem_mb": mem,
+            "oom_count": sim.oom_count}
+
+
+def make_tuner(spec, machine, *, seed: int = 0, head: str = "factored",
+               finetune_ticks: int = 250) -> InTune:
+    """Benchmark-grade InTune: pretrained (cached) agent for this length."""
+    state = get_agent_state(spec.n_stages, head=head)
+    return InTune(spec, machine, seed=seed, head=head, pretrained=state,
+                  finetune_ticks=finetune_ticks)
+
+
+def run_intune_protocol(spec, machine, ticks: int, *, resizes=None,
+                        seed: int = 0, head: str = "factored",
+                        finetune_ticks: int = 250):
+    """InTune behind the unified Optimizer protocol: the benchmark's own
+    simulator is authoritative and the tuner only proposes/observes. The
+    protocol path also restarts exploration from the incumbent best
+    (controller.explore_restart_every), which the legacy run_intune path
+    deliberately does not, to keep pre-DAG benchmark numbers unchanged."""
+    tuner = make_tuner(spec, machine, seed=seed, head=head,
+                       finetune_ticks=finetune_ticks)
+    res = run_optimizer(tuner, spec, machine, ticks, resizes=resizes,
+                        seed=seed)
+    res["tuner"] = tuner
+    return res
+
+
 def run_intune(spec, machine, ticks: int, *, resizes=None, seed: int = 0,
                head: str = "factored", finetune_ticks: int = 250):
-    state = get_agent_state(spec.n_stages, head=head)
-    tuner = InTune(spec, machine, seed=seed, head=head, pretrained=state,
-                   finetune_ticks=finetune_ticks)
+    tuner = make_tuner(spec, machine, seed=seed, head=head,
+                       finetune_ticks=finetune_ticks)
     resizes = dict(resizes or [])
     tput, used = [], []
     for t in range(ticks):

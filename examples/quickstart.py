@@ -25,6 +25,7 @@ from repro.train.train_step import make_train_step
 
 def main():
     spec = criteo_pipeline(batch_mb=1.0)
+    machine = MachineSpec(n_cpus=8, mem_mb=8192)
     stream = CriteoStream(n_sparse=8, n_dense=6, vocab=4096)
     rng = np.random.RandomState(0)
 
@@ -38,10 +39,10 @@ def main():
             CriteoStream.batch_udf,                       # batch
             lambda b: b,                                  # prefetch
         ],
-        queue_depth=8, item_mb=1.0)
+        queue_depth=8, item_mb=1.0, machine=machine)
 
     # ---- wrap it with InTune: one line + a tuning thread --------------
-    tuner = InTune(spec, MachineSpec(n_cpus=8, mem_mb=8192), seed=0,
+    tuner = InTune(spec, machine, seed=0,
                    head="factored", finetune_ticks=50)
     tuner.attach(pipe)
 

@@ -43,6 +43,17 @@ def encode_joint(choices: np.ndarray) -> int:
     return a
 
 
+def next_allocation(choices: np.ndarray, workers: np.ndarray,
+                    prefetch_mb: float, *, prefetch_idx: int,
+                    max_workers: int) -> Tuple[np.ndarray, float]:
+    """Per-stage choice indices (0..4) -> next (workers, prefetch_mb).
+    The one place action semantics are applied — env.step, the live
+    executor path, and the Optimizer-protocol path all route through it."""
+    deltas = DELTAS[np.asarray(choices, dtype=int)]
+    return apply_deltas(workers, deltas, prefetch_idx=prefetch_idx,
+                        prefetch_mb=prefetch_mb, max_workers=max_workers)
+
+
 def apply_deltas(workers: np.ndarray, deltas: np.ndarray, *,
                  prefetch_idx: int, prefetch_mb: float,
                  max_workers: int) -> Tuple[np.ndarray, float]:

@@ -184,9 +184,12 @@ class DQNAgent:
         frac = min(1.0, self.steps / max(c.eps_decay_steps, 1))
         return c.eps_start + (c.eps_end - c.eps_start) * frac
 
-    def act(self, obs: np.ndarray, explore: bool = True) -> np.ndarray:
-        """Returns per-stage choice indices (r,) in 0..4."""
-        if explore and self.rng.rand() < self.epsilon():
+    def act(self, obs: np.ndarray, explore: bool = True,
+            eps: Optional[float] = None) -> np.ndarray:
+        """Returns per-stage choice indices (r,) in 0..4. `eps` raises the
+        exploration floor above the schedule (tuning-window exploration)."""
+        e = self.epsilon() if eps is None else max(eps, self.epsilon())
+        if explore and self.rng.rand() < e:
             return self.rng.randint(0, N_CHOICES, size=self.cfg.n_stages)
         return greedy_action(self.params, obs.astype(np.float32), self.cfg)
 

@@ -15,14 +15,28 @@
   oracle             true-cost greedy water-filling (the "human expert").
 
 Static optimizers return an Allocation once; `*-Adaptive` behavior is a
-relaunch on resize, orchestrated by the benchmark loop.
+relaunch on resize, orchestrated by the benchmark loop. Each of these
+plain functions also runs behind the unified Optimizer protocol via
+`repro.core.optimizer.make_optimizer(name, ...)` (wrapped in a
+StaticOptimizer), so benchmarks drive baselines and InTune identically.
+
+All of them water-fill over the StageGraph bottleneck: with a single
+sink, the DAG's sustained rate is the min over every stage's service
+rate (simulator.sustained_rates), so the same per-stage greedy /
+proportional placement is optimal for linear chains and join DAGs alike.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.data.pipeline import PipelineSpec, stage_throughput
+from repro.data.pipeline import StageGraph, stage_throughput
 from repro.data.simulator import Allocation, MachineSpec, PipelineSim
+
+PipelineSpec = StageGraph   # pre-DAG alias, kept for imports
+
+# one-shot optimizers whose run-to-run profiling noise is part of the
+# model (each launch re-profiles); benchmarks sweep their seed
+SEEDED = frozenset({"autotune", "plumber"})
 
 
 def unoptimized(spec: PipelineSpec, machine: MachineSpec) -> Allocation:

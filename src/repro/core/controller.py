@@ -26,7 +26,17 @@ from repro.data.simulator import Allocation, MachineSpec
 
 
 class InTune:
-    """RL data-pipeline optimizer with online fine-tuning."""
+    """RL data-pipeline optimizer with online fine-tuning.
+
+    Speaks the Optimizer protocol (repro.core.optimizer): drivers loop
+    propose -> apply -> observe, with the driver owning the authoritative
+    simulator or executor. The internal PipelineEnv then serves purely as
+    the observation/reward builder. The legacy self-driving tick() loop
+    (this env's own simulator is authoritative) remains for pretraining
+    and the paper-protocol benchmarks.
+    """
+
+    name = "intune"
 
     def __init__(self, spec: PipelineSpec, machine: MachineSpec,
                  model_latency: float = 0.0, seed: int = 0,
@@ -34,7 +44,9 @@ class InTune:
                  pretrained: Optional[dict] = None,
                  explore: bool = True,
                  finetune_ticks: int = 300,
-                 track_best: bool = True):
+                 track_best: bool = True,
+                 explore_restart_every: int = 25,
+                 finetune_eps: Optional[float] = 0.4):
         self.spec = spec
         self.env = PipelineEnv(spec, machine, model_latency, seed=seed)
         cfg = DQNConfig(obs_dim=self.env.obs_dim, n_stages=spec.n_stages,
@@ -51,6 +63,15 @@ class InTune:
         self.finetune_ticks = finetune_ticks
         self.ticks_since_reset = 0
         self.track_best = track_best
+        # Optimizer-protocol path only: every N window ticks, restart the
+        # epsilon-greedy walk from the incumbent best allocation, so
+        # exploration concentrates around the best basin found instead of
+        # drifting (matters once the action space is 5^r for larger DAGs).
+        # The legacy tick() loop ignores this and keeps the paper protocol.
+        self.explore_restart_every = explore_restart_every
+        # protocol path only: exploration floor inside the tuning window
+        # (the schedule's floor applies outside / when None)
+        self.finetune_eps = finetune_eps
         self.best: tuple = (-1.0, None)  # (reward, allocation)
         self.obs = self.env.observe()
         self.history: list[dict] = []
@@ -96,6 +117,93 @@ class InTune:
     def allocation(self) -> Allocation:
         return self.env.alloc
 
+    # ------------------------------------------------- Optimizer protocol --
+    def propose(self, spec: PipelineSpec = None, machine: MachineSpec = None,
+                stats: dict = None) -> Allocation:
+        """One incremental allocation move from the current observation.
+
+        `stats`, when given, is a live stats() dict (executor contract) and
+        replaces the simulator-built observation. A machine with a
+        different CPU count re-opens the exploration window (resize).
+        """
+        if spec is not None and spec != self.spec:
+            raise ValueError(
+                f"InTune was built for spec {self.spec.name!r}; rebuild "
+                f"the controller to tune {spec.name!r}")
+        if machine is not None \
+                and machine.n_cpus != self.env.sim.machine.n_cpus:
+            self.resize(machine.n_cpus)
+        if stats is not None:
+            self.obs = self._live_obs(stats)
+        exploring = self.explore and \
+            self.ticks_since_reset < self.finetune_ticks
+        if not exploring and self.track_best and self.best[1] is not None:
+            # serving mode: hold the incumbent best (stable throughput, the
+            # paper's post-tuning behavior); a resize reopens exploration
+            self.env.alloc = self.best[1].copy()
+            self._pending = None
+            return self.env.alloc
+        choices = self.agent.act(self.obs, explore=exploring,
+                                 eps=self.finetune_eps if exploring
+                                 else None)
+        workers, pf = act_lib.next_allocation(
+            choices, self.env.alloc.workers, self.env.alloc.prefetch_mb,
+            prefetch_idx=self.env.prefetch_idx,
+            max_workers=self.env.sim.machine.n_cpus)
+        self.env.alloc = Allocation(workers, pf)
+        self._pending = (self.obs, choices)
+        return self.env.alloc
+
+    def observe(self, metrics: dict) -> None:
+        """Learn from the metrics of the proposal the driver just applied.
+
+        `metrics` is either a simulator tick dict (mem_mb/throughput) or a
+        live executor stats() dict (stage_latency/mem_frac/...). Live
+        drivers pass stats to BOTH propose and observe, so the transition's
+        next-state comes from the same measurement source as the state the
+        agent acted on — never from the internal analytic env.
+        """
+        if getattr(self, "_pending", None) is None:
+            return
+        pobs, choices = self._pending
+        self._pending = None
+        if "stage_latency" in metrics:      # live stats() contract
+            mem_frac = min(metrics["mem_frac"], 1.0)
+            nobs = self._live_obs(metrics)
+        else:
+            mem_frac = min(
+                metrics["mem_mb"] / self.env.sim.machine.mem_mb, 1.0)
+            nobs = self.env.observe()
+        reward = (metrics["throughput"] / self.env.reward_scale) \
+            * (1 - mem_frac)
+        self.agent.observe(pobs, choices, reward, nobs, done=False)
+        self.obs = nobs
+        self.ticks_since_reset += 1
+        if self.track_best and reward > self.best[0]:
+            self.best = (reward, self.env.alloc.copy())
+        # record the allocation that actually produced this tick's metrics,
+        # before any snap below replaces it
+        rec = dict(metrics)
+        rec["reward"] = reward
+        rec["workers"] = self.env.alloc.workers.copy()
+        rec["prefetch_mb"] = self.env.alloc.prefetch_mb
+        self.history.append(rec)
+        # end of the tuning window — or an exploration restart inside it —
+        # snaps to the best allocation seen (no sim.apply here: the
+        # driver's simulator is the authoritative one)
+        at_window_end = self.ticks_since_reset == self.finetune_ticks
+        at_restart = (self.explore_restart_every > 0
+                      and self.ticks_since_reset < self.finetune_ticks
+                      and self.ticks_since_reset
+                      % self.explore_restart_every == 0)
+        if (at_window_end or at_restart) and self.best[1] is not None:
+            self.env.alloc = self.best[1].copy()
+            if "stage_latency" not in metrics:
+                # sim mode only: rebuild the observation for the snapped
+                # allocation. In live mode the next propose(stats=...)
+                # supplies the real observation — never fabricate one.
+                self.obs = self.env.observe()
+
     # ----------------------------------------------------- live executor --
     def attach(self, executor, interval_s: float = 1.0):
         """Tune a real ThreadedPipeline: each tick reads its rate meters,
@@ -107,11 +215,9 @@ class InTune:
         ex = self._executor
         stats = ex.stats()
         choices = self.agent.act(self.obs, explore=self.explore)
-        deltas = act_lib.DELTAS[np.asarray(choices, dtype=int)]
-        workers, pf = act_lib.apply_deltas(
-            np.array(ex.worker_counts(), dtype=int), deltas,
-            prefetch_idx=self.env.prefetch_idx,
-            prefetch_mb=ex.prefetch_mb,
+        workers, pf = act_lib.next_allocation(
+            choices, np.array(ex.worker_counts(), dtype=int),
+            ex.prefetch_mb, prefetch_idx=self.env.prefetch_idx,
             max_workers=self.env.sim.machine.n_cpus)
         ex.set_allocation(workers, pf)
         reward = stats["throughput"] / self.env.reward_scale \

@@ -70,10 +70,9 @@ class PipelineEnv:
 
     def step(self, choices: np.ndarray) -> Tuple[np.ndarray, float, dict]:
         """choices: per-stage indices into DELTAS. Returns (obs, r, info)."""
-        deltas = act_lib.DELTAS[np.asarray(choices, dtype=int)]
-        workers, pf = act_lib.apply_deltas(
-            self.alloc.workers, deltas, prefetch_idx=self.prefetch_idx,
-            prefetch_mb=self.alloc.prefetch_mb,
+        workers, pf = act_lib.next_allocation(
+            choices, self.alloc.workers, self.alloc.prefetch_mb,
+            prefetch_idx=self.prefetch_idx,
             max_workers=self.sim.machine.n_cpus)
         self.alloc = Allocation(workers, pf)
         metrics = self.sim.apply(self.alloc)

@@ -1,0 +1,88 @@
+"""The Optimizer protocol: one interface for every allocation policy.
+
+Before this module, the five baselines were bare functions
+`fn(spec, machine[, seed]) -> Allocation` while InTune was a stateful
+class with its own tick loop, and every benchmark special-cased the two.
+Now everything that places CPUs over a StageGraph speaks one protocol:
+
+    propose(spec, machine, stats=None) -> Allocation
+        The allocation the policy wants next. `stats` carries live
+        measurements (the executor's stats() dict or a simulator
+        observation); one-shot policies ignore it.
+    observe(metrics) -> None
+        Feedback for the proposal just applied (the simulator/executor
+        metrics dict). Learning policies train on it; static ones no-op.
+
+Drivers (benchmarks/common.run_optimizer, examples, live controllers)
+loop propose -> apply -> observe without knowing which policy runs.
+Static baselines re-propose on a machine resize (the paper's *-Adaptive
+relaunch behavior is the driver charging a dead window for that).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+
+from repro.data.pipeline import StageGraph
+from repro.data.simulator import Allocation, MachineSpec
+
+
+@runtime_checkable
+class Optimizer(Protocol):
+    name: str
+
+    def propose(self, spec: StageGraph, machine: MachineSpec,
+                stats: Optional[dict] = None) -> Allocation:
+        ...
+
+    def observe(self, metrics: dict) -> None:
+        ...
+
+
+class StaticOptimizer:
+    """Adapts a one-shot baseline fn to the protocol.
+
+    Proposes once and caches the Allocation; a machine change invalidates
+    the cache (the relaunch-to-adapt behavior). Seeded policies re-profile
+    on each such relaunch — the seed advances so every launch carries
+    fresh one-shot measurement noise, which is part of their model.
+    """
+
+    def __init__(self, name: str, fn: Callable, *, seeded: bool = False,
+                 seed: int = 0):
+        self.name = name
+        self._fn = fn
+        self._seeded = seeded
+        self._seed = seed
+        self._key = None
+        self._alloc: Optional[Allocation] = None
+
+    def propose(self, spec: StageGraph, machine: MachineSpec,
+                stats: Optional[dict] = None) -> Allocation:
+        # spec is hashable (frozen dataclass): a changed spec with the
+        # same name still invalidates the cache
+        key = (spec, machine.n_cpus, machine.mem_mb)
+        if self._alloc is None or key != self._key:
+            self._key = key
+            if self._seeded:
+                self._alloc = self._fn(spec, machine, self._seed)
+                self._seed += 1  # each (re)launch is a fresh one-shot run
+            else:
+                self._alloc = self._fn(spec, machine)
+        return self._alloc
+
+    def observe(self, metrics: dict) -> None:
+        pass
+
+
+def make_optimizer(name: str, spec: StageGraph, machine: MachineSpec,
+                   seed: int = 0, **kw) -> Optimizer:
+    """Build any registered optimizer by name ("intune" or a baseline)."""
+    if name == "intune":
+        from repro.core.controller import InTune
+        return InTune(spec, machine, seed=seed, **kw)
+    from repro.core import baselines as B
+    if name not in B.BASELINES:
+        known = ["intune"] + sorted(B.BASELINES)
+        raise KeyError(f"unknown optimizer {name!r}; known: {known}")
+    return StaticOptimizer(name, B.BASELINES[name],
+                           seeded=name in B.SEEDED, seed=seed)

@@ -1,7 +1,13 @@
-"""Threaded pipeline executor: the REAL data path InTune tunes live.
+"""Threaded StageGraph executor: the REAL data path InTune tunes live.
 
-Per-stage worker pools over bounded queues (tf.data-isomorphic knob
-surface: workers per stage, prefetch buffer MB). Pools resize on the fly —
+Per-stage worker pools over one bounded queue per graph edge (tf.data-
+isomorphic knob surface: workers per stage, prefetch buffer MB). Source
+stages (no inputs) pull from their source fn; join stages (several
+inputs) gather one item from EACH input edge — the gather is serialized
+per stage so multi-worker joins keep the input streams aligned — and
+fan-out stages broadcast their output onto every outgoing edge. The sink
+stage feeds a dedicated output queue whose bound realizes the prefetch
+budget (`set_allocation` re-bounds it live). Pools resize on the fly —
 `set_allocation` is what the controller's live_tick drives. Rate meters
 (EWMA batches/s per stage) provide the Table-2 observations.
 
@@ -14,13 +20,22 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.data.pipeline import PipelineSpec
+from repro.data.pipeline import StageGraph
+from repro.data.simulator import MachineSpec
 
 _STOP = object()
+
+
+def _set_maxsize(q: "queue.Queue", n: int):
+    """Re-bound a live queue: maxsize is only read under q.mutex at
+    put/get time, so adjusting it there is race-free."""
+    with q.mutex:
+        q.maxsize = n
+        q.not_full.notify_all()
 
 
 class _RateMeter:
@@ -43,32 +58,121 @@ class _RateMeter:
 
 
 class _StagePool:
-    """Resizable worker pool: in_q -> fn -> out_q."""
+    """Resizable worker pool for one graph stage.
 
-    def __init__(self, name: str, fn: Callable, in_q, out_q,
-                 workers: int = 1):
+    in_qs == []   : source — fn() -> item, None = end of stream.
+    len(in_qs) 1+ : fn(*items) -> item; None output = filtered (dropped).
+    Output is broadcast to every out queue (fan-out edges).
+
+    EOS caveat: with a multi-worker source over a finite stream, a sibling
+    mid-produce when another worker observes EOS may enqueue its item
+    after the _STOP sentinel — up to workers-1 trailing items can be
+    dropped at end of stream (infinite training streams never hit this).
+    """
+
+    def __init__(self, name: str, fn: Callable, in_qs: Sequence,
+                 out_qs: Sequence, workers: int = 1,
+                 hard_stop: Optional[threading.Event] = None):
         self.name = name
         self.fn = fn
-        self.in_q, self.out_q = in_q, out_q
+        self.in_qs = list(in_qs)
+        self.out_qs = list(out_qs)
         self.meter = _RateMeter()
         self.threads: List[threading.Thread] = []
         self._stop_flags: List[threading.Event] = []
+        # pipeline-wide teardown. A worker's own flag is a SOFT stop
+        # (resize-down): it still delivers its in-flight item so nothing
+        # is lost mid-stream. Only the hard stop aborts blocked puts.
+        self._hard_stop = hard_stop if hard_stop is not None \
+            else threading.Event()
+        # joins gather one item per input under this lock so concurrent
+        # workers can't interleave (item i of stream A with item j of B);
+        # _partial stashes a gather interrupted by a worker stop (resize-
+        # down) so the next worker resumes it instead of dropping items
+        self._gather_lock = threading.Lock() if len(self.in_qs) > 1 else None
+        self._partial: List = []
+        self._stop_sent = threading.Event()
         self.resize(workers)
 
-    def _worker(self, stop: threading.Event):
-        while not stop.is_set():
+    # --------------------------------------------------------- plumbing ---
+    def _send_stop(self):
+        if not self._stop_sent.is_set():
+            self._stop_sent.set()
+            for q in self.out_qs:
+                self._put(q, _STOP)
+
+    def _get(self, q, stop: threading.Event):
+        while not stop.is_set() and not self._stop_sent.is_set() \
+                and not self._hard_stop.is_set():
             try:
-                item = self.in_q.get(timeout=0.1)
+                return q.get(timeout=0.1)
             except queue.Empty:
                 continue
+        return None
+
+    def _put(self, q, item):
+        while not self._hard_stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _gather(self, stop: threading.Event):
+        """One item from each input queue (aligned for joins). Returns the
+        arg list, _STOP at end of stream, or None if told to stop."""
+        # No _STOP re-put for siblings here: _send_stop sets _stop_sent,
+        # which every sibling's _get polls, so they exit on their own — a
+        # blocking re-put into a full queue would wedge the stage instead.
+        if self._gather_lock is None:
+            item = self._get(self.in_qs[0], stop)
+            if item is None:
+                return None
             if item is _STOP:
-                self.in_q.put(_STOP)  # propagate to siblings
-                return
-            out = self.fn(item)
-            if out is not None:
-                self.out_q.put(out)
+                return _STOP
+            return [item]
+        with self._gather_lock:
+            items = self._partial
+            for q in self.in_qs[len(items):]:
+                item = self._get(q, stop)
+                if item is None:
+                    self._partial = items   # resume here next gather
+                    return None
+                if item is _STOP:
+                    return _STOP
+                items.append(item)
+            self._partial = []
+            return items
+
+    def _worker(self, stop: threading.Event):
+        while not stop.is_set() and not self._hard_stop.is_set():
+            if not self.in_qs:                      # source stage
+                if self._stop_sent.is_set():        # a sibling hit EOS
+                    return
+                out = self.fn()
+                if out is None:
+                    self._send_stop()
+                    return
+            else:
+                got = self._gather(stop)
+                if got is None:
+                    if self._stop_sent.is_set():
+                        return
+                    continue
+                if got is _STOP:
+                    self._send_stop()
+                    return
+                out = self.fn(*got)
+                if out is None:                     # filtered item
+                    continue
+            delivered = True
+            for q in self.out_qs:
+                delivered = self._put(q, out) and delivered
+            if delivered:
                 self.meter.mark()
 
+    # ---------------------------------------------------------- control ---
     def resize(self, n: int):
         n = max(1, int(n))
         while len(self.threads) < n:
@@ -92,73 +196,86 @@ class _StagePool:
 
 
 class ThreadedPipeline:
-    """source_fn() -> item; stage fns: item -> item. Last queue feeds the
-    training loop via get_batch()."""
+    """Runs a StageGraph with real threads; get_batch() feeds the trainer.
 
-    def __init__(self, spec: PipelineSpec, source_fn: Callable,
-                 stage_fns: Sequence[Callable], queue_depth: int = 16,
-                 item_mb: Optional[float] = None):
-        assert len(stage_fns) == spec.n_stages - 1, \
-            "one fn per non-source stage"
+    Two construction forms:
+      - DAG form: ThreadedPipeline(spec, fns={stage_name: fn}) — source
+        fns take no args, a join stage's fn takes one arg per input (in
+        spec order), every other fn takes one.
+      - legacy linear form: ThreadedPipeline(spec, source_fn, stage_fns)
+        with one fn per non-source stage of a linear chain.
+
+    `machine` sizes the stats() observation contract (mem_frac, free_cpus)
+    the same way PipelineEnv.observe sizes the simulator's.
+    """
+
+    def __init__(self, spec: StageGraph, source_fn: Optional[Callable] = None,
+                 stage_fns: Optional[Sequence[Callable]] = None,
+                 queue_depth: int = 16, item_mb: Optional[float] = None,
+                 *, fns: Optional[Dict[str, Callable]] = None,
+                 machine: Optional[MachineSpec] = None):
+        if fns is None:
+            assert spec.is_linear, \
+                "positional (source_fn, stage_fns) form is for linear " \
+                "chains; pass fns={stage_name: fn} for a DAG"
+            assert source_fn is not None and stage_fns is not None
+            assert len(stage_fns) == spec.n_stages - 1, \
+                "one fn per non-source stage"
+            fns = {spec.stages[0].name: source_fn}
+            fns.update({s.name: fn
+                        for s, fn in zip(spec.stages[1:], stage_fns)})
+        missing = [s.name for s in spec.stages if s.name not in fns]
+        assert not missing, f"missing stage fns: {missing}"
         self.spec = spec
         self.item_mb = item_mb if item_mb is not None else spec.batch_mb
-        self.queues = [queue.Queue(maxsize=queue_depth)
-                       for _ in range(spec.n_stages)]
+        self.machine = machine if machine is not None else MachineSpec()
         self.prefetch_mb = 2 * self.item_mb
-        self._src_stop = threading.Event()
-        self._src_meter = _RateMeter()
-        self._src_fn = source_fn
-        self._src_threads: List[threading.Thread] = []
-        self._src_flags: List[threading.Event] = []
-        self._resize_source(1)
-        self.pools = []
-        for i, fn in enumerate(stage_fns):
-            self.pools.append(_StagePool(
-                spec.stages[i + 1].name, fn, self.queues[i],
-                self.queues[i + 1], workers=1))
+        # one bounded queue per graph edge + the sink's output queue,
+        # whose bound realizes the prefetch budget
+        self.edge_queues: Dict[tuple, queue.Queue] = {
+            e: queue.Queue(maxsize=queue_depth) for e in spec.edges}
+        # the output bound IS the prefetch budget, from construction on
+        self.out_q = queue.Queue(maxsize=self._prefetch_depth())
+        self._eos = False
+        self._hard_stop = threading.Event()
+        self.pools: List[_StagePool] = []
+        for i, st in enumerate(spec.stages):
+            in_qs = [self.edge_queues[(p, i)] for p in spec.parents(i)]
+            out_qs = [self.edge_queues[(i, c)] for c in spec.children(i)]
+            if i == spec.sink:
+                out_qs = [self.out_q]
+            self.pools.append(_StagePool(st.name, fns[st.name], in_qs,
+                                         out_qs, workers=1,
+                                         hard_stop=self._hard_stop))
         self.out_meter = _RateMeter()
 
-    # ------------------------------------------------------------ source --
-    def _src_worker(self, stop):
-        while not stop.is_set() and not self._src_stop.is_set():
-            item = self._src_fn()
-            if item is None:
-                self.queues[0].put(_STOP)
-                return
-            self.queues[0].put(item)
-            self._src_meter.mark()
-
-    def _resize_source(self, n: int):
-        n = max(1, int(n))
-        while len(self._src_threads) < n:
-            stop = threading.Event()
-            t = threading.Thread(target=self._src_worker, args=(stop,),
-                                 daemon=True)
-            t.start()
-            self._src_threads.append(t)
-            self._src_flags.append(stop)
-        while len(self._src_threads) > n:
-            self._src_flags.pop().set()
-            self._src_threads.pop()
+    def _prefetch_depth(self) -> int:
+        return max(1, int(self.prefetch_mb / max(self.item_mb, 1e-6)))
 
     # ----------------------------------------------------------- control --
     def worker_counts(self) -> List[int]:
-        return [len(self._src_threads)] + [p.n_workers for p in self.pools]
+        return [p.n_workers for p in self.pools]
 
     def set_allocation(self, workers, prefetch_mb: float):
-        self._resize_source(int(workers[0]))
-        for pool, w in zip(self.pools, workers[1:]):
+        for pool, w in zip(self.pools, workers):
             pool.resize(int(w))
         self.prefetch_mb = float(prefetch_mb)
-        depth = max(1, int(prefetch_mb / max(self.item_mb, 1e-6)))
-        # bounded final queue realizes the prefetch budget
-        self._prefetch_depth = depth
+        # the agent's prefetch knob IS the output queue bound: re-bound it
+        # live so a shrunk budget back-pressures the sink immediately
+        _set_maxsize(self.out_q, self._prefetch_depth())
+
+    @property
+    def prefetch_depth(self) -> int:
+        return self.out_q.maxsize
 
     def stats(self) -> dict:
-        rates = [self._src_meter.rate] + [p.meter.rate for p in self.pools]
+        rates = [p.meter.rate for p in self.pools]
         lat = [1.0 / r if r > 0 else 10.0 for r in rates]
-        qsizes = [q.qsize() for q in self.queues]
-        mem_mb = sum(qsizes) * self.item_mb + self.prefetch_mb
+        edge_sizes = [q.qsize() for q in self.edge_queues.values()]
+        qsizes = edge_sizes + [self.out_q.qsize()]
+        # prefetch budget charged once (the simulator's contract); items
+        # sitting in the output queue live inside that budget
+        mem_mb = sum(edge_sizes) * self.item_mb + self.prefetch_mb
         return {
             "throughput": self.out_meter.rate,
             "stage_rate": rates,
@@ -166,23 +283,28 @@ class ThreadedPipeline:
             "queue_sizes": qsizes,
             "workers": self.worker_counts(),
             "prefetch_mb": self.prefetch_mb,
-            "mem_frac": mem_mb / 65536.0,
-            "free_cpus": 0,
-            "counts": [self._src_meter.count]
-            + [p.meter.count for p in self.pools],
+            "mem_frac": mem_mb / self.machine.mem_mb,
+            "free_cpus": max(0, self.machine.n_cpus
+                             - sum(self.worker_counts())),
+            "counts": [p.meter.count for p in self.pools],
         }
 
     # ------------------------------------------------------------ output --
     def get_batch(self, timeout: float = 10.0):
-        item = self.queues[-1].get(timeout=timeout)
+        if self._eos and self.out_q.empty():
+            raise StopIteration
+        item = self.out_q.get(timeout=timeout)
         if item is _STOP:
+            self._eos = True
+            try:
+                self.out_q.put_nowait(_STOP)   # for sibling consumers
+            except queue.Full:
+                pass
             raise StopIteration
         self.out_meter.mark()
         return item
 
     def stop(self):
-        self._src_stop.set()
-        for f in self._src_flags:
-            f.set()
+        self._hard_stop.set()
         for p in self.pools:
             p.stop()

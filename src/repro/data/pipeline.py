@@ -1,12 +1,20 @@
 """Data-pipeline stage graph: the thing InTune allocates CPUs across.
 
-A PipelineSpec is a linear chain of stages (the paper's pipelines are
-linear: disk load -> shuffle -> UDF -> batch -> prefetch). Each stage
-carries a *true* per-batch CPU cost, a parallel-efficiency profile
-(Amdahl serial fraction), and a memory footprint model. The executor
-(data/executor.py) runs it with real threads; the simulator
-(data/simulator.py) runs the same spec analytically for RL training and
-benchmarks.
+A StageGraph is a DAG of stages. The paper's pipelines are linear chains
+(disk load -> shuffle -> UDF -> batch -> prefetch), but production DLRM
+ingestion is multi-source: dense, sparse, and label streams read from
+separate storage, joined, transformed, batched (Zhao et al.'s DSI
+breakdown; BagPipe's split embedding/dense fetch). Each StageSpec names
+its `inputs` (parent stages); a stage with no inputs is a source, a stage
+with several is a join. A tuple of input-less stages is auto-wired into
+the classic linear chain, so every pre-DAG construction site keeps
+working unchanged (`PipelineSpec` remains as an alias).
+
+Each stage carries a *true* per-batch CPU cost, a parallel-efficiency
+profile (Amdahl serial fraction), and a memory footprint model. The
+executor (data/executor.py) runs the graph with real threads and one
+bounded queue per edge; the simulator (data/simulator.py) runs the same
+spec analytically for RL training and benchmarks (DESIGN.md §3).
 
 Stage costs default to the latency shares of the paper's Figure 3
 (UDFs and disk loads dominate; shuffle/batch stay modest).
@@ -15,13 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclass(frozen=True)
 class StageSpec:
     name: str
-    kind: str                  # "source" | "shuffle" | "udf" | "batch" | "prefetch"
+    kind: str                  # "source" | "shuffle" | "udf" | "join" |
+                               # "batch" | "prefetch"
     cost: float                # true CPU-seconds per batch at 1 worker
     serial_frac: float = 0.05  # Amdahl: speedup(a) = 1 / (s + (1-s)/a)
     # what a one-shot profiler *thinks* the cost is (AUTOTUNE's model).
@@ -32,24 +41,135 @@ class StageSpec:
     mem_per_worker_mb: float = 64.0
     # prefetch: memory per buffered batch; tuned in MB by the agent
     mem_per_item_mb: float = 0.0
+    # DAG edges: names of the stages this one consumes. () = source stage.
+    inputs: Tuple[str, ...] = ()
 
     def est_cost(self) -> float:
         return self.cost * self.est_bias
 
 
 @dataclass(frozen=True)
-class PipelineSpec:
+class StageGraph:
+    """DAG of StageSpecs with validated topology.
+
+    Invariants (checked at construction):
+      - stage names are unique and every `inputs` entry names a stage,
+      - the graph is acyclic,
+      - exactly one stage has no consumers (the sink feeding the trainer),
+        which with acyclicity means every stage's output reaches the sink.
+    """
     name: str
     stages: Tuple[StageSpec, ...]
     batch_mb: float = 256.0          # bytes of one training batch
     target_rate: float = 10.0        # batches/s the model consumes at 0 idle
+    # inter-stage buffer accounting: MB charged per graph edge by the
+    # simulator's memory model. 0 keeps pre-DAG (linear) numbers identical.
+    edge_buffer_mb: float = 0.0
 
+    def __post_init__(self):
+        stages = tuple(self.stages)
+        if not stages:
+            raise ValueError("StageGraph needs at least one stage")
+        # Back-compat: a tuple of input-less stages is the classic linear
+        # chain; wire stage i to consume stage i-1.
+        if len(stages) > 1 and all(not s.inputs for s in stages):
+            stages = (stages[0],) + tuple(
+                dataclasses.replace(s, inputs=(stages[i].name,))
+                for i, s in enumerate(stages[1:]))
+            object.__setattr__(self, "stages", stages)
+        index: Dict[str, int] = {}
+        for i, s in enumerate(stages):
+            if s.name in index:
+                raise ValueError(f"duplicate stage name {s.name!r}")
+            index[s.name] = i
+        parents: List[Tuple[int, ...]] = []
+        for s in stages:
+            for p in s.inputs:
+                if p not in index:
+                    raise ValueError(
+                        f"stage {s.name!r} consumes unknown stage {p!r}")
+                if p == s.name:
+                    raise ValueError(f"stage {s.name!r} consumes itself")
+            parents.append(tuple(index[p] for p in s.inputs))
+        children: List[List[int]] = [[] for _ in stages]
+        for i, ps in enumerate(parents):
+            for p in ps:
+                children[p].append(i)
+        sinks = [i for i, cs in enumerate(children) if not cs]
+        if len(sinks) != 1:
+            names = [stages[i].name for i in sinks]
+            raise ValueError(
+                f"StageGraph {self.name!r} must have exactly one sink "
+                f"(stage nothing consumes); got {names}")
+        # Kahn's algorithm; leftover nodes = a cycle.
+        indeg = [len(ps) for ps in parents]
+        ready = [i for i, d in enumerate(indeg) if d == 0]
+        topo: List[int] = []
+        while ready:
+            i = ready.pop(0)
+            topo.append(i)
+            for c in children[i]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if len(topo) != len(stages):
+            cyc = [stages[i].name for i in range(len(stages))
+                   if i not in topo]
+            raise ValueError(f"StageGraph {self.name!r} has a cycle "
+                             f"through {cyc}")
+        object.__setattr__(self, "_index", index)
+        object.__setattr__(self, "_parents", tuple(parents))
+        object.__setattr__(self, "_children",
+                           tuple(tuple(cs) for cs in children))
+        object.__setattr__(self, "_topo", tuple(topo))
+        object.__setattr__(self, "_sink", sinks[0])
+
+    # ---------------------------------------------------------- topology --
     @property
     def n_stages(self) -> int:
         return len(self.stages)
 
+    @property
+    def topo_order(self) -> Tuple[int, ...]:
+        """Stage indices in dependency order (parents before children)."""
+        return self._topo
+
+    @property
+    def sink(self) -> int:
+        """Index of the unique output stage (feeds the training loop)."""
+        return self._sink
+
+    @property
+    def sources(self) -> Tuple[int, ...]:
+        return tuple(i for i, s in enumerate(self.stages) if not s.inputs)
+
+    @property
+    def edges(self) -> Tuple[Tuple[int, int], ...]:
+        """(producer_idx, consumer_idx) for every graph edge."""
+        return tuple((p, i) for i, ps in enumerate(self._parents)
+                     for p in ps)
+
+    @property
+    def is_linear(self) -> bool:
+        return all(ps == ((i - 1,) if i else ())
+                   for i, ps in enumerate(self._parents))
+
+    def index(self, name: str) -> int:
+        return self._index[name]
+
+    def parents(self, i: int) -> Tuple[int, ...]:
+        return self._parents[i]
+
+    def children(self, i: int) -> Tuple[int, ...]:
+        return self._children[i]
+
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
+
+
+# The pre-DAG name; a linear PipelineSpec is just a StageGraph whose
+# auto-wired chain topology is the identity permutation.
+PipelineSpec = StageGraph
 
 
 def stage_throughput(stage: StageSpec, workers: int) -> float:
@@ -61,7 +181,7 @@ def stage_throughput(stage: StageSpec, workers: int) -> float:
 
 
 def criteo_pipeline(batch_mb: float = 256.0,
-                    target_rate: float = 31.0) -> PipelineSpec:
+                    target_rate: float = 31.0) -> StageGraph:
     """The paper's 5-stage DLRM ingestion pipeline, cost shares per Fig. 3.
 
     disk load and the feature-extraction UDF dominate; the UDF is the stage
@@ -83,12 +203,12 @@ def criteo_pipeline(batch_mb: float = 256.0,
                   est_bias=1.0, mem_per_worker_mb=16,
                   mem_per_item_mb=batch_mb),
     )
-    return PipelineSpec("criteo_dlrm", stages, batch_mb=batch_mb,
-                        target_rate=target_rate)
+    return StageGraph("criteo_dlrm", stages, batch_mb=batch_mb,
+                      target_rate=target_rate)
 
 
 def custom_pipeline(batch_mb: float = 196.0,
-                    target_rate: float = 27.0) -> PipelineSpec:
+                    target_rate: float = 27.0) -> StageGraph:
     """The paper's second workload: the internal production recommender
     (dozens of sparse features, <5 continuous, batch in the tens of
     thousands). Heavier disk share, slightly lighter UDF than Criteo."""
@@ -105,14 +225,57 @@ def custom_pipeline(batch_mb: float = 196.0,
                   est_bias=1.0, mem_per_worker_mb=16,
                   mem_per_item_mb=batch_mb),
     )
-    return PipelineSpec("custom_prod", stages, batch_mb=batch_mb,
-                        target_rate=target_rate)
+    return StageGraph("custom_prod", stages, batch_mb=batch_mb,
+                      target_rate=target_rate)
+
+
+def multisource_dlrm_pipeline(batch_mb: float = 256.0,
+                              target_rate: float = 30.0) -> StageGraph:
+    """Production-shaped multi-source DLRM ingestion DAG.
+
+    Zhao et al.'s DSI characterization: dense, sparse, and label streams
+    are read from separate storage partitions and joined before the
+    feature transforms. Sparse-ID reads dominate the I/O bytes and the
+    feature transforms dominate CPU time (the GPU trainer is otherwise
+    starved by online preprocessing), so `sparse_source` and
+    `feature_udf` carry the heavy costs here; the UDF keeps the
+    black-box est_bias that misleads static profilers.
+
+        dense_source ─┐
+        sparse_source ─┼─> join ─> feature_udf ─> batch ─> prefetch
+        label_source ─┘
+    """
+    stages = (
+        StageSpec("dense_source", "source", cost=0.12, serial_frac=0.10,
+                  est_bias=0.8, mem_per_worker_mb=80),
+        StageSpec("sparse_source", "source", cost=0.30, serial_frac=0.12,
+                  est_bias=0.7, mem_per_worker_mb=112),
+        StageSpec("label_source", "source", cost=0.03, serial_frac=0.05,
+                  est_bias=1.0, mem_per_worker_mb=24),
+        StageSpec("join", "join", cost=0.07, serial_frac=0.30,
+                  est_bias=1.0, mem_per_worker_mb=48,
+                  inputs=("dense_source", "sparse_source", "label_source")),
+        StageSpec("feature_udf", "udf", cost=0.40, serial_frac=0.15,
+                  est_bias=0.15, mem_per_worker_mb=64,
+                  inputs=("join",)),
+        StageSpec("batch", "batch", cost=0.11, serial_frac=0.25,
+                  est_bias=1.0, mem_per_worker_mb=32,
+                  inputs=("feature_udf",)),
+        StageSpec("prefetch", "prefetch", cost=0.06, serial_frac=0.05,
+                  est_bias=1.0, mem_per_worker_mb=16,
+                  mem_per_item_mb=batch_mb, inputs=("batch",)),
+    )
+    return StageGraph("multisource_dlrm", stages, batch_mb=batch_mb,
+                      target_rate=target_rate, edge_buffer_mb=32.0)
 
 
 def make_pipeline(n_stages: int, seed: int = 0, batch_mb: float = 256.0,
-                  target_rate: float = 10.0) -> PipelineSpec:
-    """Randomized pipeline of a given length (offline RL pretraining uses a
-    distribution over these; the paper trains one agent per length)."""
+                  target_rate: float = 10.0) -> StageGraph:
+    """Randomized linear pipeline of a given length (offline RL pretraining
+    uses a distribution over these; the paper trains one agent per length).
+    The simulator's dynamics depend only on the per-stage rate vector, so
+    agents pretrained on these chains transfer to DAGs of equal stage
+    count (DESIGN.md §4)."""
     import numpy as np
     rng = np.random.RandomState(seed)
     kinds = ["source"] + ["udf", "shuffle", "batch"][: max(n_stages - 2, 0)] \
@@ -130,5 +293,5 @@ def make_pipeline(n_stages: int, seed: int = 0, batch_mb: float = 256.0,
             serial_frac=float(rng.uniform(0.02, 0.15)), est_bias=bias,
             mem_per_worker_mb=float(rng.uniform(16, 128)),
             mem_per_item_mb=batch_mb if kind == "prefetch" else 0.0))
-    return PipelineSpec(f"rand{n_stages}_{seed}", tuple(stages),
-                        batch_mb=batch_mb, target_rate=target_rate)
+    return StageGraph(f"rand{n_stages}_{seed}", tuple(stages),
+                      batch_mb=batch_mb, target_rate=target_rate)

@@ -4,9 +4,12 @@ The paper pretrains its DQN agent "in offline simulations" (§4.2); this
 module is that simulator promoted to a first-class, tested component. It is
 also the benchmark engine: the container exposes one CPU, so the paper's
 128-CPU Xeon scaling behavior is modeled analytically (DESIGN.md §3) —
-stage throughput follows Amdahl scaling on the stage's true cost, pipeline
-throughput is the bottleneck stage (pipelined execution [21]), and memory
-tracks worker overheads plus the prefetch buffer.
+stage throughput follows Amdahl scaling on the stage's true cost, graph
+throughput propagates bottlenecks through the StageGraph in topological
+order (a join runs at the min of its parents; for a linear chain this is
+exactly the classic bottleneck-stage formula, pipelined execution [21]),
+and memory tracks worker overheads, per-edge buffers, and the prefetch
+buffer.
 
 Semantics shared by every optimizer under test (level playing field):
   - allocations: integer workers per stage + prefetch buffer depth,
@@ -63,16 +66,32 @@ class PipelineSim:
 
     # ------------------------------------------------------------ model ---
     def stage_rates(self, alloc: Allocation) -> np.ndarray:
+        """Per-stage service rate (what the stage could process given its
+        workers, were its inputs never the constraint)."""
         return np.array([
             stage_throughput(st, int(w))
             for st, w in zip(self.spec.stages, alloc.workers)])
 
+    def sustained_rates(self, alloc: Allocation) -> np.ndarray:
+        """Per-stage sustained rate over the DAG in topological order: a
+        stage runs at min(its own service rate, its input rate), and a
+        join's input rate is the min over its parents (it pairs one item
+        from each input stream per output). For a linear chain the sink's
+        sustained rate is exactly min over all stages — the pre-DAG
+        bottleneck formula."""
+        out = self.stage_rates(alloc)
+        for i in self.spec.topo_order:
+            for p in self.spec.parents(i):
+                if out[p] < out[i]:
+                    out[i] = out[p]
+        return out
+
     def throughput(self, alloc: Allocation) -> float:
-        """Sustained batches/s: bottleneck stage, capped by model demand."""
+        """Sustained batches/s at the sink, capped by model demand."""
         rates = self.stage_rates(alloc)
         if np.any(rates <= 0):
             return 0.0
-        rate = float(np.min(rates))
+        rate = float(self.sustained_rates(alloc)[self.spec.sink])
         if self.model_latency > 0:
             rate = min(rate, 1.0 / self.model_latency)
         return rate
@@ -81,6 +100,7 @@ class PipelineSim:
         mb = 2048.0  # framework + model host memory floor
         for st, w in zip(self.spec.stages, alloc.workers):
             mb += st.mem_per_worker_mb * int(w)
+        mb += self.spec.edge_buffer_mb * len(self.spec.edges)
         mb += alloc.prefetch_mb
         return mb
 
@@ -124,7 +144,10 @@ class PipelineSim:
                         iters: int = 4096) -> Tuple[Allocation, float]:
         """Oracle: greedy water-filling on TRUE costs + efficiency curves
         (provably optimal for min-bottleneck with concave per-stage rates:
-        each CPU goes to the current bottleneck)."""
+        each CPU goes to the current bottleneck). With a single sink every
+        stage is an ancestor of it, so the DAG's sustained sink rate is the
+        min over all service rates and water-filling on service rates stays
+        optimal."""
         n = n_cpus or self.machine.n_cpus
         workers = np.ones(self.spec.n_stages, dtype=int)
         # leave a little memory headroom; prefetch sized to depth 2

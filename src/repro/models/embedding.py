@@ -57,10 +57,7 @@ def tp_embedding_lookup(table, ids, mesh):
         return jnp.take(table, ids, axis=0)
     v_loc = v // tp
 
-    try:
-        from jax import shard_map as _shard_map
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _shard_map
+    from repro.common.shardlib import compat_shard_map as _shard_map
     P = jax.sharding.PartitionSpec
 
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -82,7 +79,7 @@ def tp_embedding_lookup(table, ids, mesh):
         return jax.lax.psum(e, "model")
 
     return _shard_map(f, mesh=mesh, in_specs=(P("model", None), ids_spec),
-                      out_specs=out_spec, check_vma=False)(table, ids)
+                      out_specs=out_spec)(table, ids)
 
 
 def embedding_bag(table, ids, *, combiner: str = "sum", weights=None):
@@ -174,10 +171,7 @@ def tp_multifeature_bag(tables, ids, mesh, *, combiner: str = "sum"):
         return multifeature_bag(tables, ids, combiner=combiner)
     v_loc = v // n_shards
 
-    try:
-        from jax import shard_map as _shard_map
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _shard_map
+    from repro.common.shardlib import compat_shard_map as _shard_map
     P = jax.sharding.PartitionSpec
 
     lead = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
@@ -239,10 +233,10 @@ def tp_multifeature_bag(tables, ids, mesh, *, combiner: str = "sum"):
 
     fwd_sm = _shard_map(fwd_local, mesh=mesh,
                         in_specs=(P(None, row_axes, None), ids_spec),
-                        out_specs=ids_spec, check_vma=False)
+                        out_specs=ids_spec)
     bwd_sm = _shard_map(bwd_local, mesh=mesh,
                         in_specs=(ids_spec, ids_spec),
-                        out_specs=P(None, row_axes, None), check_vma=False)
+                        out_specs=P(None, row_axes, None))
 
     @jax.custom_vjp
     def lookup(tbl, idl):

@@ -98,10 +98,7 @@ def full_graph_partitioned_loss(params, cfg: GNNConfig, batch, mesh):
     batch: x (N_pad, d) replicated; edge_src/edge_dst (n_shards, e_loc)
     int32 bucketed by dst; labels (N_pad,) sharded (-1 = masked/pad).
     """
-    try:
-        from jax import shard_map as _shard_map
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _shard_map
+    from repro.common.shardlib import compat_shard_map as _shard_map
     P = jax.sharding.PartitionSpec
     axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
     n_shards = 1
@@ -148,7 +145,7 @@ def full_graph_partitioned_loss(params, cfg: GNNConfig, batch, mesh):
         in_specs=(jax.tree_util.tree_map(lambda _: P(), params),
                   P(None, None), P(row_axes, None), P(row_axes, None),
                   P(row_axes)),
-        out_specs=P(), check_vma=False)(
+        out_specs=P())(
         params, batch["x"], batch["edge_src"], batch["edge_dst"],
         batch["labels"])
     return loss, {"xent": loss}

@@ -24,10 +24,7 @@ import jax.numpy as jnp
 
 from repro.models.layers import activation
 
-try:  # jax>=0.4.35 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.common.shardlib import compat_shard_map as _shard_map
 
 P = jax.sharding.PartitionSpec
 
@@ -194,5 +191,5 @@ def moe_ffn(x, p, cfg, mesh: Optional[jax.sharding.Mesh], e_pad: int):
 
     y, aux = _shard_map(
         fn, mesh=mesh, in_specs=(x_spec, w_specs),
-        out_specs=(x_spec, P()), check_vma=False)(x2, p)
+        out_specs=(x_spec, P()))(x2, p)
     return y.reshape(orig_shape), aux

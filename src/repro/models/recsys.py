@@ -333,10 +333,7 @@ def tp_sampled_scores(items, h, cand, mesh):
     embeddings (B, M, C, D). Autodiff scatters d_items into the local row
     shard (§Perf hillclimb 2).
     """
-    try:
-        from jax import shard_map as _shard_map
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map as _shard_map
+    from repro.common.shardlib import compat_shard_map as _shard_map
     P = jax.sharding.PartitionSpec
     names = mesh.axis_names
     tp = mesh.shape.get("model", 1)
@@ -366,7 +363,7 @@ def tp_sampled_scores(items, h, cand, mesh):
         f, mesh=mesh,
         in_specs=(P("model", None), P(lead, None, None),
                   P(lead, None, None)),
-        out_specs=P(lead, None, None), check_vma=False)(items, h, cand)
+        out_specs=P(lead, None, None))(items, h, cand)
 
 
 def bert4rec_sampled_logits(params, cfg: RecsysConfig, batch, ctx=None):

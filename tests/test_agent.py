@@ -2,6 +2,7 @@
 learning on a trivial contextual task, state_dict roundtrip."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import actions as act_lib

@@ -78,18 +78,14 @@ def test_microbatched_grads_match_full_batch():
 def test_grad_compression_psum():
     """bf16/int8 compressed allreduce ~= exact mean (shard_map, 1 device)."""
     from repro.train.collectives import psum_tree
-    try:
-        from jax import shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
+    from repro.common.shardlib import compat_shard_map
     from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1,), ("data",))
     g = {"w": jnp.asarray(np.random.RandomState(0).randn(64), jnp.float32)}
 
     for mode, tol in [("none", 1e-7), ("bf16", 1e-2), ("int8", 2e-2)]:
-        out = jax.jit(shard_map(
+        out = jax.jit(compat_shard_map(
             lambda t: psum_tree(t, ("data",), compress=mode),
-            mesh=mesh, in_specs=({"w": P()},), out_specs={"w": P()},
-            check_vma=False))(g)
+            mesh=mesh, in_specs=({"w": P()},), out_specs={"w": P()}))(g)
         np.testing.assert_allclose(np.asarray(out["w"]),
                                    np.asarray(g["w"]), rtol=tol, atol=tol)

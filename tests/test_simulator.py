@@ -1,6 +1,7 @@
 """Property-based tests of the pipeline simulator invariants (hypothesis)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import (criteo_pipeline, make_pipeline,
