@@ -71,15 +71,25 @@ def run_static(spec, machine, alloc, ticks: int, *, resizes=None,
 
 
 def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
-                  seed: int = 0, relaunch_dead: int = 0):
+                  seed: int = 0, relaunch_dead: int = 0,
+                  sim_factory=PipelineSim, collect=None):
     """Drive any Optimizer-protocol policy against one authoritative sim.
 
     The generic loop the protocol exists for: propose -> apply -> observe.
     `relaunch_dead` > 0 charges the *-Adaptive relaunch window whenever a
     static policy changes its proposal after a resize (learning policies
     re-allocate live and should pass 0).
+
+    The same loop drives BOTH planes: `sim_factory(spec, machine, seed=s)`
+    defaults to the single-machine PipelineSim; pass
+    `lambda c, _, seed: FleetSim(c, seed=seed)` with a ClusterSpec to
+    drive a fleet policy (FleetSim speaks the same machine/apply/resize
+    dialect, and FleetAllocation flattens to the same workers/prefetch_mb
+    views the changed-proposal check compares). `collect(t, metrics)`,
+    when given, sees every tick's full metrics dict (per-trainer
+    breakdowns, which the aggregate return drops).
     """
-    sim = PipelineSim(spec, machine, seed=seed)
+    sim = sim_factory(spec, machine, seed=seed)
     resizes = dict(resizes or [])
     tput, used, mem = [], [], []
     dead = 0
@@ -88,6 +98,10 @@ def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
         if t in resizes:
             sim.resize(resizes[t])
         alloc = opt.propose(spec, sim.machine)
+        # capacity the proposal was made against: reading sim.machine
+        # AFTER apply would let a fleet's next-tick churn events fire
+        # early and clamp this tick's used_cpus with t+1 capacity
+        cap = sim.machine.n_cpus
         changed = prev is not None and (
             not np.array_equal(alloc.workers, prev.workers)
             or alloc.prefetch_mb != prev.prefetch_mb)
@@ -104,11 +118,34 @@ def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
         else:
             m = sim.apply(alloc)
         opt.observe(m)
+        if collect is not None:
+            collect(t, m)
         tput.append(m["throughput"])
-        used.append(min(m["used_cpus"], sim.machine.n_cpus))
+        used.append(min(m["used_cpus"], cap))
         mem.append(m["mem_mb"])
     return {"throughput": tput, "used_cpus": used, "mem_mb": mem,
             "oom_count": sim.oom_count}
+
+
+def run_fleet_optimizer(opt, cluster, ticks: int, *, seed: int = 0,
+                        relaunch_dead: int = 0, collect=None):
+    """run_optimizer over a fleet: same loop, FleetSim authoritative."""
+    from repro.data.fleet import FleetSim
+    return run_optimizer(
+        opt, cluster, None, ticks, seed=seed, relaunch_dead=relaunch_dead,
+        sim_factory=lambda c, _m, seed=0: FleetSim(c, seed=seed),
+        collect=collect)
+
+
+def make_fleet_coordinator(cluster, *, seed: int = 0, head: str = "factored",
+                           finetune_ticks: int = 150, **kw):
+    """Benchmark-grade FleetCoordinator: one cached pretrained agent per
+    distinct pipeline length in the cluster."""
+    from repro.core.fleet_coordinator import FleetCoordinator
+    lengths = sorted({t.pipeline.n_stages for t in cluster.trainers})
+    pretrained = {n: get_agent_state(n, head=head) for n in lengths}
+    return FleetCoordinator(cluster, pretrained=pretrained, seed=seed,
+                            head=head, finetune_ticks=finetune_ticks, **kw)
 
 
 def make_tuner(spec, machine, *, seed: int = 0, head: str = "factored",

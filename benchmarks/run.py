@@ -1,9 +1,10 @@
 """Benchmark entrypoint: one module per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig5|fig7|fig8|roofline|kernels]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5|fig7|fig7_fleet|fig8|roofline|kernels]
 
   fig5   static throughput + OOM rates   (paper Fig. 5A/5B)
   fig7   rescale timelines + utilization (paper Fig. 7A-C, 2.05-2.29x)
+  fig7_fleet  multi-trainer cluster co-tuning under churn (fleet plane)
   fig8   scaling drilldowns              (paper Fig. 8A-C)
   roofline  §Roofline table from the dry-run artifacts
   kernels   Pallas kernel micro-bench
@@ -17,12 +18,12 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="fig5|fig7|fig8|roofline|kernels")
+                    help="fig5|fig7|fig7_fleet|fig8|roofline|kernels")
     args = ap.parse_args(argv)
     t0 = time.time()
 
-    from benchmarks import (fig5_static, fig7_rescale, fig8_scaling,
-                            kernels_bench, roofline)
+    from benchmarks import (fig5_static, fig7_fleet, fig7_rescale,
+                            fig8_scaling, kernels_bench, roofline)
     ran = []
     if args.only in (None, "fig5"):
         fig5_static.run("criteo")
@@ -32,6 +33,9 @@ def main(argv=None):
         fig7_rescale.run("criteo")
         fig7_rescale.run("custom")
         ran.append("fig7")
+    if args.only in (None, "fig7_fleet"):
+        fig7_fleet.run()
+        ran.append("fig7_fleet")
     if args.only in (None, "fig8"):
         fig8_scaling.run()
         ran.append("fig8")

@@ -1,0 +1,238 @@
+"""FleetCoordinator: InTune at cluster granularity.
+
+One InTune DQN agent per trainer (reusing the per-length pretrained
+weights), with a coordinator arbitrating the shared elastic CPU pool
+above them. It speaks the Optimizer protocol against a FleetSim:
+
+    falloc = coord.propose(cluster, fleet_state)   # FleetAllocation
+    metrics = fleet_sim.apply(falloc)
+    coord.observe(metrics)                          # routes per-trainer
+
+Coordinator responsibilities (the cluster plane; each InTune keeps owning
+its machine's per-stage placement):
+
+  - POOL ARBITRATION: greedy marginal-throughput exchange — pool CPUs are
+    water-filled to the machines whose analytic oracle curve gains most
+    from +1 cap (the same model InTune's own env uses for reward
+    scaling). Grants are re-fit on churn and every `rebalance_every`
+    ticks, but only applied when the plan beats the current split by
+    `rebalance_tol` — a granted-cap change re-opens that trainer's
+    exploration window (InTune's resize behavior), so flapping is worse
+    than a slightly stale split.
+  - CHURN RE-TUNING: a FleetState change (join / leave / machine resize /
+    pool re-cap) re-plans grants; affected trainers see a new effective
+    cap and re-open their tuning windows (the controller's serve-best /
+    reopen logic), while untouched trainers keep serving their best.
+  - OOM PROTECTION: admission control clamps any proposal whose analytic
+    memory footprint exceeds `mem_headroom` of the machine (prefetch
+    shrinks first, then workers shed from the most-replicated stage), and
+    an observed OOM quarantines the trainer — it serves the safe oracle
+    allocation with exploration frozen for `quarantine_ticks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core.controller import InTune
+from repro.data.fleet import ClusterSpec, FleetAllocation, FleetState
+from repro.data.simulator import Allocation, graph_memory_mb
+
+
+def clamp_to_memory(pipeline, alloc: Allocation, mem_mb: float,
+                    headroom: float = 0.9) -> Allocation:
+    """Admission control: shrink an allocation until its analytic memory
+    footprint fits within headroom * mem_mb. Prefetch gives first (down
+    to one batch, or its current value if already below that), then
+    workers shed from the most-replicated stage (never below 1 per
+    stage). If even the minimal allocation exceeds the budget the
+    machine fundamentally cannot run within headroom — the minimal
+    allocation is returned; there is nothing left to shed."""
+    budget = headroom * mem_mb
+
+    def used(workers, prefetch):
+        # the simulator's own memory model: the guard and the OOM judge
+        # share one definition and cannot diverge
+        return graph_memory_mb(pipeline, workers, prefetch)
+
+    workers = alloc.workers.copy()
+    prefetch = alloc.prefetch_mb
+    if used(workers, prefetch) <= budget:
+        return alloc
+    need = used(workers, prefetch) - budget
+    # the floor never raises prefetch above what the proposal asked for
+    prefetch = max(min(prefetch, pipeline.batch_mb), prefetch - need)
+    while used(workers, prefetch) > budget and workers.max() > 1:
+        workers[int(np.argmax(workers))] -= 1
+    return Allocation(workers, prefetch)
+
+
+class FleetCoordinator:
+    """Cluster-granularity Optimizer: per-trainer InTune + pool arbitration.
+
+    `pretrained` maps pipeline length -> agent state_dict (the cached
+    offline-pretrained weights; see benchmarks.common.get_agent_state).
+    A length with no entry starts that trainer's agent from scratch.
+    """
+
+    name = "fleet_intune"
+
+    def __init__(self, cluster: ClusterSpec,
+                 pretrained: Optional[Dict[int, dict]] = None,
+                 seed: int = 0, head: str = "factored",
+                 finetune_ticks: int = 150,
+                 rebalance_every: int = 100, rebalance_tol: float = 1.02,
+                 mem_headroom: float = 0.95, mem_guard: bool = True,
+                 quarantine_ticks: int = 40):
+        self.cluster = cluster
+        self.pretrained = pretrained or {}
+        self.seed = seed
+        self.head = head
+        self.finetune_ticks = finetune_ticks
+        self.rebalance_every = rebalance_every
+        self.rebalance_tol = rebalance_tol
+        self.mem_headroom = mem_headroom
+        self.mem_guard = mem_guard
+        self.quarantine_ticks = quarantine_ticks
+        self.tuners: Dict[str, InTune] = {}
+        self.grants: Dict[str, int] = {}
+        self.quarantine: Dict[str, int] = {}
+        self.history: list = []
+        self._last_key = None
+        self._tick = 0
+        self._last_active: tuple = ()
+
+    # ------------------------------------------------------ arbitration ---
+    def _plan_grants(self, state: FleetState) -> Dict[str, int]:
+        """Greedy marginal-throughput water-filling of the pool over the
+        active machines' analytic oracle curves."""
+        plan = B.fleet_oracle(self.cluster, state)
+        return plan.grants
+
+    def _planned_tput(self, state: FleetState, grants: Dict[str, int]) -> float:
+        return sum(B._oracle_point(self.cluster.trainer(n),
+                                   state.base(n) + grants.get(n, 0))[1]
+                   for n in state.active)
+
+    def _arbitrate(self, state: FleetState):
+        """Re-fit pool grants. Mandatory on churn (the active set or caps
+        changed — stale grants may not even fit the pool); on periodic
+        checks the new split must clear `rebalance_tol` to be applied."""
+        churned = state.key() != self._last_key
+        periodic = (self.rebalance_every > 0
+                    and self._tick % self.rebalance_every == 0)
+        if not (churned or periodic or not self.grants):
+            return
+        plan = self._plan_grants(state)
+        if not churned and self.grants:
+            cur = {n: self.grants.get(n, 0) for n in state.active}
+            if self._planned_tput(state, plan) \
+                    < self.rebalance_tol * self._planned_tput(state, cur):
+                return          # not worth re-opening tuning windows
+        self.grants = plan
+        self._last_key = state.key()
+
+    def _warm_start(self, name: str, tuner: InTune, trainer, eff: int):
+        """Anchor a tuner's exploration at the planner's (memory-clamped)
+        oracle point for its current effective cap. The DQN still owns the
+        walk from there — the warm start just means re-tuning starts from
+        the arbitration model's best guess instead of an even split, the
+        same way the controller's serve-best snaps exploration back to the
+        incumbent best."""
+        safe = clamp_to_memory(trainer.pipeline,
+                               B._oracle_point(trainer, eff)[0],
+                               trainer.machine.mem_mb, self.mem_headroom)
+        tuner.env.set_allocation(safe)
+        tuner.obs = tuner.env.observe()
+
+    # --------------------------------------------------------- protocol ---
+    def propose(self, cluster: ClusterSpec = None,
+                state: FleetState = None,
+                stats: Optional[dict] = None) -> FleetAllocation:
+        if cluster is not None and cluster is not self.cluster \
+                and cluster != self.cluster:
+            raise ValueError("FleetCoordinator was built for cluster "
+                             f"{self.cluster.name!r}")
+        assert state is not None, "propose needs the FleetState"
+        self._arbitrate(state)
+        allocs: Dict[str, Allocation] = {}
+        grants = {n: int(self.grants.get(n, 0)) for n in state.active}
+        for name in state.active:
+            trainer = self.cluster.trainer(name)
+            eff = state.base(name) + grants[name]
+            machine = dataclasses.replace(trainer.machine, n_cpus=eff)
+            tuner = self.tuners.get(name)
+            if tuner is None:
+                tuner = InTune(
+                    trainer.pipeline, machine, trainer.model_latency,
+                    seed=self.seed + len(self.tuners), head=self.head,
+                    pretrained=self.pretrained.get(
+                        trainer.pipeline.n_stages),
+                    finetune_ticks=self.finetune_ticks)
+                self.tuners[name] = tuner
+                self._warm_start(name, tuner, trainer, eff)
+            elif eff != tuner.env.sim.machine.n_cpus:
+                # churn / re-arbitration changed this machine's effective
+                # cap: re-open its tuning window anchored at the planner's
+                # point for the new cap (serve-best/reopen, coordinated)
+                tuner.resize(eff)
+                self._warm_start(name, tuner, trainer, eff)
+            if self.quarantine.get(name, 0) > 0:
+                # quarantined: serve the safe oracle allocation, keep the
+                # agent frozen (no pending transition -> observe no-ops)
+                self.quarantine[name] -= 1
+                safe = clamp_to_memory(
+                    trainer.pipeline, B._oracle_point(trainer, eff)[0],
+                    trainer.machine.mem_mb, self.mem_headroom)
+                tuner.env.alloc = safe.copy()
+                tuner._pending = None
+                allocs[name] = safe
+                continue
+            alloc = tuner.propose(trainer.pipeline, machine)
+            if self.mem_guard:
+                clamped = clamp_to_memory(trainer.pipeline, alloc,
+                                          trainer.machine.mem_mb,
+                                          self.mem_headroom)
+                if clamped is not alloc:
+                    # keep the tuner's notion of "what ran" consistent
+                    tuner.env.alloc = clamped.copy()
+                    alloc = clamped
+            allocs[name] = alloc
+        self._tick += 1
+        self._last_active = state.active
+        return FleetAllocation(allocs, grants)
+
+    def observe(self, metrics: dict) -> None:
+        per = metrics.get("per_trainer")
+        if per is None:
+            return              # fleet-wide dead window: nothing ran
+        for name, m in per.items():
+            tuner = self.tuners.get(name)
+            if tuner is None:
+                continue
+            # the tuner always sees the outcome first — an OOM tick is the
+            # paper's strongest learning signal (reward collapses to 0) —
+            # then the coordinator quarantines the machine
+            tuner.observe(m)
+            if m.get("oom"):
+                self.quarantine[name] = self.quarantine_ticks
+        self.history.append({
+            "throughput": metrics["throughput"],
+            "n_active": metrics.get("n_active", len(per)),
+            "oom": metrics.get("oom", False),
+            "grants": dict(self.grants)})
+
+    # ------------------------------------------------------ persistence ---
+    def state_dict(self) -> dict:
+        return {"grants": dict(self.grants),
+                "tuners": {n: t.state_dict()
+                           for n, t in self.tuners.items()}}
+
+    def load_state_dict(self, state: dict):
+        self.grants = dict(state["grants"])
+        for name, s in state["tuners"].items():
+            if name in self.tuners:
+                self.tuners[name].load_state_dict(s)

@@ -86,3 +86,49 @@ def make_optimizer(name: str, spec: StageGraph, machine: MachineSpec,
         raise KeyError(f"unknown optimizer {name!r}; known: {known}")
     return StaticOptimizer(name, B.BASELINES[name],
                            seeded=name in B.SEEDED, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Cluster granularity: the same protocol, one level up. A fleet policy's
+# propose(cluster, fleet_state) answers with a FleetAllocation and its
+# observe gets the FleetSim's aggregate metrics dict — so
+# benchmarks.common.run_optimizer drives a whole fleet with the identical
+# propose -> apply -> observe loop.
+# ---------------------------------------------------------------------------
+
+class FleetStaticOptimizer:
+    """Adapts a one-shot fleet baseline fn(cluster, state, seed) to the
+    protocol. The cache is keyed on FleetState.key(): any churn (join /
+    leave / machine resize / pool re-cap) invalidates it, so static fleet
+    policies re-propose exactly when a real deployment would relaunch —
+    the driver charges that relaunch window via `relaunch_dead`."""
+
+    def __init__(self, name: str, fn: Callable, *, seed: int = 0):
+        self.name = name
+        self._fn = fn
+        self._seed = seed
+        self._key = None
+        self._falloc = None
+
+    def propose(self, cluster, state, stats: Optional[dict] = None):
+        if self._falloc is None or state.key() != self._key:
+            self._key = state.key()
+            self._falloc = self._fn(cluster, state, self._seed)
+            self._seed += 1     # each relaunch is a fresh one-shot run
+        return self._falloc
+
+    def observe(self, metrics: dict) -> None:
+        pass
+
+
+def make_fleet_optimizer(name: str, cluster, seed: int = 0, **kw):
+    """Build any registered fleet policy: "fleet_intune" (the
+    FleetCoordinator) or a fleet baseline from B.FLEET_BASELINES."""
+    if name == "fleet_intune":
+        from repro.core.fleet_coordinator import FleetCoordinator
+        return FleetCoordinator(cluster, seed=seed, **kw)
+    from repro.core import baselines as B
+    if name not in B.FLEET_BASELINES:
+        known = ["fleet_intune"] + sorted(B.FLEET_BASELINES)
+        raise KeyError(f"unknown fleet optimizer {name!r}; known: {known}")
+    return FleetStaticOptimizer(name, B.FLEET_BASELINES[name], seed=seed)

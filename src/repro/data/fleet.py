@@ -1,0 +1,291 @@
+"""Fleet-scale cluster simulator: the plane above the data plane.
+
+The paper's setting is a Netflix compute cluster of many trainer machines
+whose ingestion pipelines are tuned independently; its headline numbers
+(aggregate ingestion throughput, CPU & GPU utilization) are cluster-level
+outcomes. Zhao et al.'s DSI characterization shows production DLRM
+ingestion is provisioned fleet-wide, with machines joining and leaving
+jobs. This module models that fleet:
+
+  - a ClusterSpec of N heterogeneous TrainerSpecs (each its own
+    StageGraph pipeline, MachineSpec, and model demand),
+  - a shared elastic CPU pool the cluster plane can grant to machines on
+    top of their owned CPUs (sum of grants <= pool),
+  - a churn schedule of FleetEvents — machines join, leave, and shrink
+    mid-run, and the pool itself can be re-capped — generalizing the
+    single-machine `resize_schedule`.
+
+FleetSim runs one PipelineSim per trainer and speaks the same driver
+dialect as PipelineSim (`machine` / `apply` / `resize` / `oom_count`), so
+`benchmarks.common.run_optimizer` drives a fleet policy with the exact
+propose -> apply -> observe loop used for single machines. Policies see
+the FleetState (active set, per-machine owned CPUs, pool) and answer with
+a FleetAllocation (per-trainer Allocation + pool grants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.pipeline import StageGraph
+from repro.data.simulator import Allocation, MachineSpec, PipelineSim
+
+EVENT_KINDS = ("join", "leave", "resize", "pool")
+
+
+@dataclass(frozen=True)
+class TrainerSpec:
+    """One trainer machine in the fleet: its pipeline, hardware, and the
+    rate its model consumes batches (1/model_latency caps throughput)."""
+    name: str
+    pipeline: StageGraph
+    machine: MachineSpec
+    model_latency: float = 0.0
+    start_active: bool = True
+
+
+@dataclass(frozen=True)
+class FleetEvent:
+    """A churn event: at `tick`, `trainer` joins/leaves the job, its
+    machine is resized to `n_cpus`, or (kind="pool") the shared pool is
+    re-capped to `n_cpus`."""
+    tick: int
+    kind: str                    # "join" | "leave" | "resize" | "pool"
+    trainer: str = ""            # unused for kind="pool"
+    n_cpus: int = 0              # new cap for "resize" / "pool"
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """The fleet: trainers + shared elastic CPU pool + churn schedule."""
+    name: str
+    trainers: Tuple[TrainerSpec, ...]
+    shared_pool: int = 0
+    events: Tuple[FleetEvent, ...] = ()
+
+    def __post_init__(self):
+        names = [t.name for t in self.trainers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate trainer names in {names}")
+        if self.shared_pool < 0:
+            raise ValueError("shared_pool must be >= 0")
+        for ev in self.events:
+            if ev.kind not in EVENT_KINDS:
+                raise ValueError(f"unknown event kind {ev.kind!r}; "
+                                 f"known: {EVENT_KINDS}")
+            if ev.kind != "pool" and ev.trainer not in names:
+                raise ValueError(
+                    f"event {ev.kind!r}@{ev.tick} targets unknown trainer "
+                    f"{ev.trainer!r}")
+            if ev.kind in ("resize", "pool") and ev.n_cpus < 0:
+                raise ValueError(f"event {ev.kind!r}@{ev.tick}: n_cpus < 0")
+
+    def trainer(self, name: str) -> TrainerSpec:
+        for t in self.trainers:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+
+@dataclass(frozen=True)
+class FleetState:
+    """The cluster plane's dynamic view: what a fleet policy proposes
+    against. `base_cpus` is each ACTIVE machine's owned CPUs (after any
+    resize churn); the pool is granted on top of those."""
+    tick: int
+    pool: int
+    active: Tuple[str, ...]                    # spec order
+    base_cpus: Tuple[Tuple[str, int], ...]     # (name, owned cpus), active
+
+    def key(self):
+        """Cache key for static policies: everything but the tick."""
+        return (self.pool, self.active, self.base_cpus)
+
+    def base(self, name: str) -> int:
+        return dict(self.base_cpus)[name]
+
+    @property
+    def n_cpus(self) -> int:
+        """Total CPUs the fleet can place right now (owned + pool)."""
+        return sum(c for _, c in self.base_cpus) + self.pool
+
+
+@dataclass
+class FleetAllocation:
+    """Per-trainer pipeline allocations + shared-pool grants.
+
+    The `workers` / `prefetch_mb` views flatten the fleet into the shape
+    single-machine drivers compare on (run_optimizer's changed-proposal
+    check), so the same driver loop serves both planes.
+    """
+    allocs: Dict[str, Allocation]
+    grants: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def workers(self) -> np.ndarray:
+        if not self.allocs:
+            return np.zeros(0, dtype=int)
+        parts = [self.allocs[n].workers for n in sorted(self.allocs)]
+        grants = [int(self.grants.get(n, 0)) for n in sorted(self.allocs)]
+        return np.concatenate(parts + [np.asarray(grants, dtype=int)])
+
+    @property
+    def prefetch_mb(self) -> float:
+        return float(sum(a.prefetch_mb for a in self.allocs.values()))
+
+    def copy(self) -> "FleetAllocation":
+        return FleetAllocation({n: a.copy() for n, a in self.allocs.items()},
+                               dict(self.grants))
+
+
+class FleetSim:
+    """N per-trainer PipelineSims under a shared pool and churn schedule.
+
+    Speaks the single-machine driver dialect:
+      machine   -> FleetState (events due at the current tick are applied
+                   first, so policies propose against the post-churn view)
+      apply     -> one tick for every active trainer; aggregate metrics
+                   plus a "per_trainer" breakdown
+      resize(n) -> re-caps the shared pool (the fleet-level analog of a
+                   machine resize; per-machine churn goes via events)
+    """
+
+    def __init__(self, cluster: ClusterSpec, seed: int = 0,
+                 obs_noise: float = 0.02):
+        self.cluster = cluster
+        self.time = 0
+        self.pool = cluster.shared_pool
+        self._base = {t.name: t.machine.n_cpus for t in cluster.trainers}
+        self._active = {t.name: t.start_active for t in cluster.trainers}
+        self.sims: Dict[str, PipelineSim] = {
+            t.name: PipelineSim(t.pipeline, t.machine, t.model_latency,
+                                seed=seed + i, obs_noise=obs_noise)
+            for i, t in enumerate(cluster.trainers)}
+        self._events = sorted(cluster.events, key=lambda e: e.tick)
+        self._next_event = 0
+
+    # ----------------------------------------------------------- churn ----
+    def _advance_events(self):
+        """Apply every event due at or before the current tick (idempotent:
+        the cursor only moves forward)."""
+        while self._next_event < len(self._events) \
+                and self._events[self._next_event].tick <= self.time:
+            ev = self._events[self._next_event]
+            self._next_event += 1
+            if ev.kind == "join":
+                self._active[ev.trainer] = True
+                # a (re)joining machine is a fresh process: no restart debt
+                self.sims[ev.trainer].restart_left = 0
+            elif ev.kind == "leave":
+                self._active[ev.trainer] = False
+            elif ev.kind == "resize":
+                self._base[ev.trainer] = int(ev.n_cpus)
+            elif ev.kind == "pool":
+                self.pool = int(ev.n_cpus)
+
+    @property
+    def machine(self) -> FleetState:
+        self._advance_events()
+        active = tuple(t.name for t in self.cluster.trainers
+                       if self._active[t.name])
+        return FleetState(tick=self.time, pool=self.pool, active=active,
+                          base_cpus=tuple((n, self._base[n]) for n in active))
+
+    @property
+    def oom_count(self) -> int:
+        return sum(s.oom_count for s in self.sims.values())
+
+    def resize(self, pool: int):
+        self.pool = int(pool)
+
+    # ------------------------------------------------------------ tick ----
+    def apply(self, falloc: FleetAllocation) -> dict:
+        self._advance_events()
+        state = self.machine
+        unknown = [n for n in falloc.grants
+                   if not any(t.name == n for t in self.cluster.trainers)]
+        if unknown:
+            raise ValueError(f"grants name unknown trainers {unknown}")
+        # grants to inactive trainers consume nothing (stale keys after a
+        # leave event are harmless); only active grants draw on the pool
+        granted = sum(int(falloc.grants.get(n, 0)) for n in state.active)
+        if granted > self.pool:
+            raise ValueError(
+                f"grants total {granted} exceed shared pool {self.pool}")
+        per: Dict[str, dict] = {}
+        tput = mem = used = 0.0
+        any_oom = any_restart = False
+        for name in state.active:
+            sim = self.sims[name]
+            eff = self._base[name] + int(falloc.grants.get(name, 0))
+            if sim.machine.n_cpus != eff:
+                sim.resize(eff)
+            if name not in falloc.allocs:
+                raise KeyError(
+                    f"no allocation proposed for active trainer {name!r}")
+            m = sim.apply(falloc.allocs[name])
+            m["eff_cpus"] = eff
+            per[name] = m
+            tput += m["throughput"]
+            mem += m["mem_mb"]
+            used += min(m["used_cpus"], eff)
+            any_oom = any_oom or m["oom"]
+            any_restart = any_restart or m["restarting"]
+        self.time += 1
+        return {"throughput": tput, "mem_mb": mem, "used_cpus": int(used),
+                "oom": any_oom, "restarting": any_restart,
+                "n_active": len(state.active), "pool": self.pool,
+                "per_trainer": per}
+
+
+def churn_schedule(total_ticks: int,
+                   events: Sequence[Tuple[float, str, str, int]]
+                   ) -> Tuple[FleetEvent, ...]:
+    """Fleet analog of `resize_schedule`: events placed at fractions of the
+    run. Each entry is (frac, kind, trainer, n_cpus); frac in [0, 1)."""
+    return tuple(FleetEvent(tick=int(frac * total_ticks), kind=kind,
+                            trainer=trainer, n_cpus=n_cpus)
+                 for frac, kind, trainer, n_cpus in events)
+
+
+def demo_cluster(ticks: int = 1200, pool: int = 80) -> ClusterSpec:
+    """The canonical 4-machine heterogeneous fleet with churn used by the
+    fig7_fleet benchmark, the fleet example, and the acceptance tests.
+
+    Heterogeneity axes: machine size (24-96 owned CPUs), memory (6-64 GB),
+    pipeline shape (two linear chains + the multi-source join DAG), and
+    model demand (1/model_latency b/s). Two machines carry the production
+    pathologies memory-blind policies die on: "small" saturates its model
+    with a handful of CPUs (pool grants parked there are pure waste) and
+    both "small" and "late" are memory-tight (6 GB), so an even split of
+    the pool pushes their per-worker footprint past the physical memory
+    line — the Fig. 5B OOM crash-loop, now at fleet scale. Churn: "late"
+    joins a third of the way in, "big" shrinks mid-run, "small" leaves
+    near the end.
+    """
+    from repro.data.pipeline import (criteo_pipeline, custom_pipeline,
+                                     multisource_dlrm_pipeline)
+    trainers = (
+        TrainerSpec("big", criteo_pipeline(),
+                    MachineSpec(n_cpus=96, mem_mb=65536.0),
+                    model_latency=0.02),
+        TrainerSpec("mid", custom_pipeline(),
+                    MachineSpec(n_cpus=48, mem_mb=32768.0),
+                    model_latency=0.04),
+        TrainerSpec("small", multisource_dlrm_pipeline(),
+                    MachineSpec(n_cpus=24, mem_mb=6144.0),
+                    model_latency=0.2),
+        TrainerSpec("late", criteo_pipeline(),
+                    MachineSpec(n_cpus=64, mem_mb=6144.0),
+                    model_latency=0.025, start_active=False),
+    )
+    events = churn_schedule(ticks, [
+        (1 / 3, "join", "late", 0),
+        (0.55, "resize", "big", 48),
+        (0.80, "leave", "small", 0),
+    ])
+    return ClusterSpec("demo_fleet4", trainers, shared_pool=pool,
+                       events=events)

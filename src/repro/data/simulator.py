@@ -49,6 +49,21 @@ class Allocation:
 OOM_RESTART_TICKS = 30  # teardown + relaunch dead time (paper: "significant")
 
 
+def graph_memory_mb(spec: PipelineSpec, workers, prefetch_mb: float) -> float:
+    """THE memory model: framework floor + per-worker overheads +
+    per-edge buffers + the prefetch buffer. PipelineSim scores OOMs with
+    it and the fleet coordinator's admission control clamps against it —
+    one definition, so the guard can never diverge from the judge.
+    (Accumulation order is kept stable: these floats feed byte-identical
+    golden files.)"""
+    mb = 2048.0  # framework + model host memory floor
+    for st, w in zip(spec.stages, workers):
+        mb += st.mem_per_worker_mb * int(w)
+    mb += spec.edge_buffer_mb * len(spec.edges)
+    mb += prefetch_mb
+    return mb
+
+
 class PipelineSim:
     """Analytic pipeline simulator with OOM + resize dynamics."""
 
@@ -97,12 +112,7 @@ class PipelineSim:
         return rate
 
     def memory_used(self, alloc: Allocation) -> float:
-        mb = 2048.0  # framework + model host memory floor
-        for st, w in zip(self.spec.stages, alloc.workers):
-            mb += st.mem_per_worker_mb * int(w)
-        mb += self.spec.edge_buffer_mb * len(self.spec.edges)
-        mb += alloc.prefetch_mb
-        return mb
+        return graph_memory_mb(self.spec, alloc.workers, alloc.prefetch_mb)
 
     def measured_latencies(self, alloc: Allocation) -> np.ndarray:
         """Per-stage effective latency (1/rate) with observation noise —

@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) of StageGraph/simulator invariants.
+
+Every property is a deterministic function of one integer seed (the graph
+generator and allocations derive from np.random.RandomState(seed)), so
+hypothesis gets perfectly reproducible examples and shrinking works on
+the seed alone."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import (StageGraph, StageSpec, make_pipeline,
+                                 stage_throughput)
+from repro.data.simulator import Allocation, MachineSpec, PipelineSim
+
+SEEDS = st.integers(0, 10_000)
+
+
+def random_stage_graph(seed: int) -> StageGraph:
+    """Random valid DAG: edges only run forward (acyclic by construction),
+    middle stages consume a random predecessor subset (an empty subset
+    makes an extra source), and the last stage consumes every dangling
+    output so there is exactly one sink."""
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(3, 9))
+    names = [f"s{i}" for i in range(n)]
+    stages = []
+    for i in range(n):
+        if i == 0:
+            inputs = ()
+        elif i < n - 1:
+            k = int(rng.randint(0, min(i, 3) + 1))
+            picks = rng.choice(i, size=k, replace=False)
+            inputs = tuple(names[j] for j in sorted(picks))
+        else:
+            consumed = {p for s in stages for p in s.inputs}
+            dangling = [names[j] for j in range(n - 1)
+                        if names[j] not in consumed]
+            inputs = tuple(dangling) if dangling else (names[n - 2],)
+        kind = "source" if not inputs else (
+            "prefetch" if i == n - 1 else "udf")
+        stages.append(StageSpec(
+            names[i], kind, cost=float(rng.uniform(0.05, 0.5)),
+            serial_frac=float(rng.uniform(0.0, 0.3)),
+            mem_per_worker_mb=float(rng.uniform(16, 128)),
+            inputs=inputs))
+    return StageGraph(f"rand_dag_{seed}", tuple(stages),
+                      batch_mb=float(rng.choice([128.0, 256.0])),
+                      edge_buffer_mb=float(rng.choice([0.0, 16.0, 32.0])))
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=SEEDS)
+def test_topo_order_is_valid_linearization(seed):
+    g = random_stage_graph(seed)
+    assert sorted(g.topo_order) == list(range(g.n_stages))
+    pos = {i: k for k, i in enumerate(g.topo_order)}
+    for producer, consumer in g.edges:
+        assert pos[producer] < pos[consumer]
+    # and the declared sink really is the unique stage nothing consumes
+    consumed = {p for p, _ in g.edges}
+    assert [i for i in range(g.n_stages) if i not in consumed] == [g.sink]
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=SEEDS)
+def test_sustained_rates_bounded_by_service_rates(seed):
+    g = random_stage_graph(seed)
+    rng = np.random.RandomState(seed + 1)
+    sim = PipelineSim(g, MachineSpec())
+    alloc = Allocation(rng.randint(1, 24, size=g.n_stages))
+    assert np.all(sim.sustained_rates(alloc)
+                  <= sim.stage_rates(alloc) + 1e-9)
+    # the sink's sustained rate is the graph throughput (no model demand)
+    assert sim.throughput(alloc) == pytest.approx(
+        sim.sustained_rates(alloc)[g.sink])
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=SEEDS)
+def test_linear_chain_reduces_to_min_bottleneck(seed):
+    rng = np.random.RandomState(seed)
+    spec = make_pipeline(int(rng.randint(3, 8)), seed=seed)
+    assert spec.is_linear
+    sim = PipelineSim(spec, MachineSpec())
+    alloc = Allocation(rng.randint(1, 40, size=spec.n_stages))
+    rates = [stage_throughput(s, int(w))
+             for s, w in zip(spec.stages, alloc.workers)]
+    assert sim.throughput(alloc) == pytest.approx(min(rates))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=SEEDS)
+def test_best_allocation_respects_memory_cap(seed):
+    g = random_stage_graph(seed)
+    rng = np.random.RandomState(seed + 2)
+    machine = MachineSpec(n_cpus=int(rng.choice([16, 32, 64, 128])),
+                          mem_mb=float(rng.choice([16384, 32768, 65536])))
+    sim = PipelineSim(g, machine)
+    alloc, tput = sim.best_allocation()
+    assert sim.memory_used(alloc) <= machine.mem_mb
+    assert alloc.workers.sum() >= g.n_stages       # one worker everywhere
+    assert tput == pytest.approx(sim.throughput(alloc))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=SEEDS)
+def test_oracle_monotone_in_cpus(seed):
+    """Adding a CPU to the oracle never lowers throughput (water-filling
+    on concave per-stage rates is monotone in the budget)."""
+    g = random_stage_graph(seed)
+    rng = np.random.RandomState(seed + 3)
+    machine = MachineSpec(n_cpus=128,
+                          mem_mb=float(rng.choice([16384, 65536])))
+    model_lat = float(rng.choice([0.0, 0.0, 0.05]))
+    sim = PipelineSim(g, machine, model_lat)
+    n = int(rng.randint(g.n_stages, 96))
+    _, t_n = sim.best_allocation(n_cpus=n)
+    _, t_n1 = sim.best_allocation(n_cpus=n + 1)
+    assert t_n1 >= t_n - 1e-9

@@ -213,6 +213,22 @@ def test_env_and_even_allocation_on_dag():
     assert even_allocation(spec, 128).workers.sum() <= 128
 
 
+def test_env_initializes_from_paper_heuristic_not_fixed_even():
+    """Frozen-protocol regression: PipelineEnv must start from the paper's
+    even-division heuristic baseline (floor split, remainder dropped) —
+    the state every published fig5/fig7 number started from — NOT from
+    the fixed even_allocation (which distributes the remainder and would
+    silently shift the whole InTune trajectory)."""
+    spec = criteo_pipeline()
+    env = PipelineEnv(spec, MachineSpec(n_cpus=128), seed=0)
+    assert env.alloc.workers.tolist() == [25] * 5          # floor(128/5)
+    assert env.alloc.workers.tolist() \
+        == B.heuristic_even(spec, MachineSpec(n_cpus=128)).workers.tolist()
+    # ... while the fixed even_allocation places all 128
+    assert even_allocation(spec, 128).workers.tolist() \
+        == [26, 26, 26, 25, 25]
+
+
 @pytest.fixture(scope="module")
 def pretrained_r7():
     # short offline pass over random 7-stage specs; the simulator's
