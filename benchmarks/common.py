@@ -128,13 +128,44 @@ def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
 
 
 def run_fleet_optimizer(opt, cluster, ticks: int, *, seed: int = 0,
-                        relaunch_dead: int = 0, collect=None):
-    """run_optimizer over a fleet: same loop, FleetSim authoritative."""
-    from repro.data.fleet import FleetSim
-    return run_optimizer(
-        opt, cluster, None, ticks, seed=seed, relaunch_dead=relaunch_dead,
-        sim_factory=lambda c, _m, seed=0: FleetSim(c, seed=seed),
-        collect=collect)
+                        relaunch_dead: int = 0, collect=None,
+                        backend: str = "sim", backend_kw=None):
+    """run_optimizer over a fleet: same loop, the chosen backend
+    authoritative.
+
+    backend="sim" drives the analytic FleetSim; backend="live" drives
+    real ThreadedPipeline executors (repro.data.live_fleet.LiveFleet —
+    same dialect, measured throughput), closed after the run with its
+    drop/leak accounting returned under the "live" result key.
+    `backend_kw` passes backend-specific knobs (e.g. window_s,
+    obs_noise).
+    """
+    kw = dict(backend_kw or {})
+    if backend == "sim":
+        from repro.data.fleet import FleetSim
+        factory = lambda c, _m, seed=0: FleetSim(c, seed=seed, **kw)
+        return run_optimizer(opt, cluster, None, ticks, seed=seed,
+                             relaunch_dead=relaunch_dead,
+                             sim_factory=factory, collect=collect)
+    if backend != "live":
+        raise KeyError(f"unknown fleet backend {backend!r}; "
+                       f"known: ['sim', 'live']")
+    from repro.data.live_fleet import LiveFleet
+    created = []
+
+    def factory(c, _m, seed=0):
+        lf = LiveFleet(c, seed=seed, **kw)
+        created.append(lf)
+        return lf
+
+    try:
+        res = run_optimizer(opt, cluster, None, ticks, seed=seed,
+                            relaunch_dead=relaunch_dead,
+                            sim_factory=factory, collect=collect)
+    finally:
+        accts = [lf.close() for lf in created]
+    res["live"] = accts[0] if accts else {}
+    return res
 
 
 def make_fleet_coordinator(cluster, *, seed: int = 0, head: str = "factored",

@@ -23,6 +23,13 @@ observe loop used for single machines:
 
 Acceptance targets (ISSUE 2): coordinator >= 90% of the fleet oracle,
 >= 1.3x fleet-even, zero steady-state OOMs.
+
+`--live` (ISSUE 3) swaps the authoritative backend for LiveFleet: the
+3-trainer live cluster (repro.data.live_fleet.live_demo_cluster) runs
+one REAL ThreadedPipeline per trainer through the same driver loop, and
+the coordinator is scored against fleet_even on MEASURED aggregate
+throughput under churn — zero coordinator OOMs, zero dropped batches,
+every thread joined.
 """
 from __future__ import annotations
 
@@ -136,5 +143,72 @@ def run(ticks: int = 1200, seed: int = 0, quiet: bool = False) -> dict:
     return summary
 
 
+def run_live(ticks: int = 160, window_s: float = 0.12, seed: int = 0,
+             quiet: bool = False) -> dict:
+    """Coordinator vs fleet_even on real executors (LiveFleet backend).
+
+    Scores are MEASURED batch-counter rates, not analytic predictions.
+    The relaunch dead window for the static policy is scaled to the
+    (shorter) live run so churn adaptation costs stay proportional to
+    the sim benchmark's 20/1200.
+    """
+    from repro.data.live_fleet import live_demo_cluster
+    cluster = live_demo_cluster(ticks)
+    # same share of the run as the sim benchmark's 20/1200 per relaunch,
+    # so the static baseline's churn-adaptation cost is comparable
+    dead_ticks = max(2, round(ticks * common.RELAUNCH_TICKS / 1200))
+    runs = {}
+    for name in ("fleet_even", "fleet_intune"):
+        if name == "fleet_intune":
+            opt = common.make_fleet_coordinator(cluster, seed=seed,
+                                                finetune_ticks=40)
+            dead = 0            # re-tunes live, like single-machine InTune
+        else:
+            opt = make_fleet_optimizer(name, cluster, seed=seed)
+            dead = dead_ticks
+        runs[name] = common.run_fleet_optimizer(
+            opt, cluster, ticks, seed=seed, relaunch_dead=dead,
+            backend="live", backend_kw={"window_s": window_s})
+
+    summary = {}
+    for name, r in runs.items():
+        tp = np.asarray(r["throughput"])
+        summary[name] = {
+            "mean_tput": float(tp.mean()),
+            "oom_count": int(r["oom_count"]),
+            "dropped_batches": int(r["live"]["dropped_batches"]),
+            "crash_lost": int(r["live"]["crash_lost"]),
+            "all_joined": bool(r["live"]["all_joined"]),
+        }
+    summary["_speedups"] = {
+        "intune_vs_even": float(
+            summary["fleet_intune"]["mean_tput"]
+            / max(summary["fleet_even"]["mean_tput"], 1e-9))}
+    if not quiet:
+        print(f"\n== Fig7 fleet LIVE ({cluster.name}, {ticks} ticks x "
+              f"{window_s}s windows, pool {cluster.shared_pool}) ==")
+        for name in ("fleet_even", "fleet_intune"):
+            s = summary[name]
+            print(f"  {name:14s} measured {s['mean_tput']:7.1f} b/s | "
+                  f"OOMs {s['oom_count']:2d} | dropped "
+                  f"{s['dropped_batches']} | joined {s['all_joined']}")
+        print(f"  coordinator vs fleet-even (measured): "
+              f"{summary['_speedups']['intune_vs_even']:.2f}x")
+    common.save_json("fig7_fleet_live.json", {
+        "summary": summary,
+        "timelines": {k: r["throughput"] for k, r in runs.items()}})
+    return summary
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--live", action="store_true",
+                    help="score policies on real ThreadedPipeline "
+                         "executors (LiveFleet) instead of FleetSim")
+    ap.add_argument("--ticks", type=int, default=None)
+    args = ap.parse_args()
+    if args.live:
+        run_live(**({"ticks": args.ticks} if args.ticks else {}))
+    else:
+        run(**({"ticks": args.ticks} if args.ticks else {}))

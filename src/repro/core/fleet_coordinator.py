@@ -184,6 +184,11 @@ class FleetCoordinator:
                 # quarantined: serve the safe oracle allocation, keep the
                 # agent frozen (no pending transition -> observe no-ops)
                 self.quarantine[name] -= 1
+                if self.quarantine[name] == 0:
+                    # re-admission next tick: force a pool re-arbitration
+                    # so the returning trainer's grant is re-fit against
+                    # the machines that absorbed the pool meanwhile
+                    self._last_key = None
                 safe = clamp_to_memory(
                     trainer.pipeline, B._oracle_point(trainer, eff)[0],
                     trainer.machine.mem_mb, self.mem_headroom)

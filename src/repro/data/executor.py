@@ -92,6 +92,7 @@ class _StagePool:
         self._gather_lock = threading.Lock() if len(self.in_qs) > 1 else None
         self._partial: List = []
         self._stop_sent = threading.Event()
+        self._retired: List[threading.Thread] = []
         self.resize(workers)
 
     # --------------------------------------------------------- plumbing ---
@@ -183,8 +184,13 @@ class _StagePool:
             self.threads.append(t)
             self._stop_flags.append(stop)
         while len(self.threads) > n:
+            # SOFT stop: the worker delivers its in-flight item, then
+            # exits; keep the handle so teardown can join it (leak
+            # check). Handles that already exited need no join — prune
+            # them so per-tick re-allocation can't grow this unboundedly.
+            self._retired = [t for t in self._retired if t.is_alive()]
             self._stop_flags.pop().set()
-            self.threads.pop()
+            self._retired.append(self.threads.pop())
 
     @property
     def n_workers(self) -> int:
@@ -193,6 +199,16 @@ class _StagePool:
     def stop(self):
         for f in self._stop_flags:
             f.set()
+
+    def join(self, timeout: float = 2.0) -> bool:
+        """Join every thread this pool ever started (live + retired).
+        Returns True when all of them exited within the deadline."""
+        deadline = time.monotonic() + timeout
+        ok = True
+        for t in self.threads + self._retired:
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+            ok = ok and not t.is_alive()
+        return ok
 
 
 class ThreadedPipeline:
@@ -288,6 +304,74 @@ class ThreadedPipeline:
                              - sum(self.worker_counts())),
             "counts": [p.meter.count for p in self.pools],
         }
+
+    # ------------------------------------------------------ measurement --
+    def counters(self) -> dict:
+        """Monotonic batch counters + timestamp for measured-throughput
+        windows. A window rate is a counter DELTA over the measured
+        elapsed between two snapshots — free of the EWMA meters' wall-
+        clock decay state, so it stays rank-stable under CI scheduler
+        contention. `delivered` counts batches the sink stage put into
+        the output queue; `consumed` counts batches handed to the
+        trainer via get_batch()."""
+        return {"delivered": self.pools[self.spec.sink].meter.count,
+                "consumed": self.out_meter.count,
+                "time": time.monotonic()}
+
+    @staticmethod
+    def window_rate(before: dict, after: dict, key: str = "consumed") -> float:
+        """Batches/s between two counters() snapshots."""
+        dt = max(after["time"] - before["time"], 1e-9)
+        return (after[key] - before[key]) / dt
+
+    # ----------------------------------------------------------- teardown --
+    def shutdown(self, drain: bool = True, timeout: float = 5.0) -> dict:
+        """Graceful teardown honoring the soft/hard stop split.
+
+        Soft-stops every pool first (each worker delivers its in-flight
+        item — a churn-driven leave/resize must not lose batches mid-
+        stream), drains batches still parked in the output queue so the
+        sink workers can flush, then hard-stops and joins every thread
+        this pipeline ever started. Returns the accounting a clean leave
+        is judged on: `dropped` = delivered - consumed - drained is 0
+        when no sink-delivered batch was lost. `drain=False` models a
+        crash (OOM kill): no drain pass, in-flight batches are lost.
+        """
+        deadline = time.monotonic() + timeout
+        for p in self.pools:
+            p.stop()
+        drained = 0
+        sink_pool = self.pools[self.spec.sink]
+        if drain:
+            # keep emptying the output queue until the sink workers have
+            # flushed their in-flight items and exited — a full queue
+            # would otherwise wedge their final (soft-stopped) delivery
+            while time.monotonic() < deadline:
+                try:
+                    if self.out_q.get_nowait() is not _STOP:
+                        drained += 1
+                except queue.Empty:
+                    if not any(t.is_alive() for t in sink_pool.threads):
+                        break
+                    time.sleep(0.005)
+        self._hard_stop.set()
+        # join BEFORE the final sweep: a worker still blocked in a put
+        # could land one more item the moment the sweep makes room
+        joined = True
+        for p in self.pools:
+            joined = p.join(max(0.1, deadline - time.monotonic())) and joined
+        while True:
+            try:
+                if self.out_q.get_nowait() is not _STOP:
+                    drained += 1
+            except queue.Empty:
+                break
+        delivered = sink_pool.meter.count
+        consumed = self.out_meter.count
+        return {"delivered": delivered, "consumed": consumed,
+                "drained": drained, "joined": joined,
+                "dropped": (max(0, delivered - consumed - drained)
+                            if drain else 0)}
 
     # ------------------------------------------------------------ output --
     def get_batch(self, timeout: float = 10.0):

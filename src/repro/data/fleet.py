@@ -141,33 +141,34 @@ class FleetAllocation:
                                dict(self.grants))
 
 
-class FleetSim:
-    """N per-trainer PipelineSims under a shared pool and churn schedule.
+class FleetBackend:
+    """Shared churn/state machinery for fleet backends.
 
-    Speaks the single-machine driver dialect:
-      machine   -> FleetState (events due at the current tick are applied
-                   first, so policies propose against the post-churn view)
-      apply     -> one tick for every active trainer; aggregate metrics
-                   plus a "per_trainer" breakdown
-      resize(n) -> re-caps the shared pool (the fleet-level analog of a
-                   machine resize; per-machine churn goes via events)
+    Every backend that runs a cluster — the analytic `FleetSim` below and
+    the live-executor `repro.data.live_fleet.LiveFleet` — shares this
+    base: the owned-CPU / active-set / pool bookkeeping, the event cursor
+    (idempotent: it only moves forward), and the driver dialect surface
+    (`machine` / `resize` / grant validation). Subclasses hook churn via
+    `_on_join` / `_on_leave` (called AFTER the state flip, so the hook
+    sees the post-event active set) and implement `apply`.
     """
 
-    def __init__(self, cluster: ClusterSpec, seed: int = 0,
-                 obs_noise: float = 0.02):
+    def __init__(self, cluster: ClusterSpec):
         self.cluster = cluster
         self.time = 0
         self.pool = cluster.shared_pool
         self._base = {t.name: t.machine.n_cpus for t in cluster.trainers}
         self._active = {t.name: t.start_active for t in cluster.trainers}
-        self.sims: Dict[str, PipelineSim] = {
-            t.name: PipelineSim(t.pipeline, t.machine, t.model_latency,
-                                seed=seed + i, obs_noise=obs_noise)
-            for i, t in enumerate(cluster.trainers)}
         self._events = sorted(cluster.events, key=lambda e: e.tick)
         self._next_event = 0
 
     # ----------------------------------------------------------- churn ----
+    def _on_join(self, name: str):
+        pass
+
+    def _on_leave(self, name: str):
+        pass
+
     def _advance_events(self):
         """Apply every event due at or before the current tick (idempotent:
         the cursor only moves forward)."""
@@ -177,10 +178,10 @@ class FleetSim:
             self._next_event += 1
             if ev.kind == "join":
                 self._active[ev.trainer] = True
-                # a (re)joining machine is a fresh process: no restart debt
-                self.sims[ev.trainer].restart_left = 0
+                self._on_join(ev.trainer)
             elif ev.kind == "leave":
                 self._active[ev.trainer] = False
+                self._on_leave(ev.trainer)
             elif ev.kind == "resize":
                 self._base[ev.trainer] = int(ev.n_cpus)
             elif ev.kind == "pool":
@@ -194,17 +195,11 @@ class FleetSim:
         return FleetState(tick=self.time, pool=self.pool, active=active,
                           base_cpus=tuple((n, self._base[n]) for n in active))
 
-    @property
-    def oom_count(self) -> int:
-        return sum(s.oom_count for s in self.sims.values())
-
     def resize(self, pool: int):
         self.pool = int(pool)
 
-    # ------------------------------------------------------------ tick ----
-    def apply(self, falloc: FleetAllocation) -> dict:
-        self._advance_events()
-        state = self.machine
+    def _check_falloc(self, falloc: FleetAllocation, state: FleetState):
+        """The grant contract every backend enforces identically."""
         unknown = [n for n in falloc.grants
                    if not any(t.name == n for t in self.cluster.trainers)]
         if unknown:
@@ -215,6 +210,41 @@ class FleetSim:
         if granted > self.pool:
             raise ValueError(
                 f"grants total {granted} exceed shared pool {self.pool}")
+
+
+class FleetSim(FleetBackend):
+    """N per-trainer PipelineSims under a shared pool and churn schedule.
+
+    Speaks the single-machine driver dialect:
+      machine   -> FleetState (events due at the current tick are applied
+                   first, so policies propose against the post-churn view)
+      apply     -> one tick for every active trainer; aggregate metrics
+                   plus a "per_trainer" breakdown
+      resize(n) -> re-caps the shared pool (the fleet-level analog of a
+                   machine resize; per-machine churn goes via events)
+    """
+
+    def __init__(self, cluster: ClusterSpec, seed: int = 0,
+                 obs_noise: float = 0.02):
+        super().__init__(cluster)
+        self.sims: Dict[str, PipelineSim] = {
+            t.name: PipelineSim(t.pipeline, t.machine, t.model_latency,
+                                seed=seed + i, obs_noise=obs_noise)
+            for i, t in enumerate(cluster.trainers)}
+
+    def _on_join(self, name: str):
+        # a (re)joining machine is a fresh process: no restart debt
+        self.sims[name].restart_left = 0
+
+    @property
+    def oom_count(self) -> int:
+        return sum(s.oom_count for s in self.sims.values())
+
+    # ------------------------------------------------------------ tick ----
+    def apply(self, falloc: FleetAllocation) -> dict:
+        self._advance_events()
+        state = self.machine
+        self._check_falloc(falloc, state)
         per: Dict[str, dict] = {}
         tput = mem = used = 0.0
         any_oom = any_restart = False

@@ -1,0 +1,374 @@
+"""LiveFleet: the fleet plane on real ThreadedPipeline executors.
+
+FleetSim (data/fleet.py) validates fleet policies against N analytic
+per-trainer models; this module is the same plane made executable — one
+real `ThreadedPipeline` per active trainer, with worker threads whose
+per-item work realizes each StageSpec's true cost, and a consumer thread
+per trainer modeling the training loop (pulls batches, sleeps
+`model_latency` per batch, so model demand back-pressures the pipeline
+exactly where the simulator caps throughput).
+
+LiveFleet speaks the exact FleetSim driver dialect (`machine` / `apply`
+/ `resize` / `oom_count`), so `benchmarks.common.run_optimizer` and the
+`FleetCoordinator` drive it unchanged. Contract alignment with the sim:
+
+  - THROUGHPUT is measured, not modeled: `apply` sets every active
+    trainer's allocation first (atomically, before any measurement),
+    then sleeps one shared `window_s` window and reads each pipeline's
+    batch-counter delta over the measured elapsed
+    (`ThreadedPipeline.counters`, wall-clock-free of the EWMA meters).
+  - MEMORY is budget-enforced accounting: the same `graph_memory_mb`
+    model the simulator scores OOMs with. An over-budget allocation is
+    an OOM — the pipeline process is killed (hard stop, no drain) and
+    pays the simulator's `OOM_RESTART_TICKS` dead window before a fresh
+    relaunch — so the coordinator's admission control and quarantine
+    semantics transfer verbatim.
+  - CHURN honors the soft/hard stop split: a `leave` (and `close`) tears
+    a pipeline down gracefully — soft-stop, drain the output queue, then
+    hard-stop and join every thread — and accounts any sink-delivered
+    batch that was lost in `dropped_batches` (0 on clean teardown). A
+    `join` spins up a fresh pipeline; `resize`/`pool` re-caps apply
+    before the next measurement window.
+
+Known sim-vs-live gaps (DESIGN.md §7): stage work is `time.sleep`, so a
+serial fraction is emulated by a per-stage lock (exact only for
+`serial_frac == 0`, which the live clusters below use), and CPU
+over-subscription does not physically contend — the simulator's
+proportional slowdown is charged in accounting instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.executor import ThreadedPipeline
+from repro.data.fleet import (ClusterSpec, FleetAllocation, FleetBackend,
+                              TrainerSpec, churn_schedule)
+from repro.data.pipeline import StageGraph, StageSpec
+from repro.data.simulator import (Allocation, MachineSpec, OOM_RESTART_TICKS,
+                                  graph_memory_mb)
+
+
+def synthetic_stage_fns(spec: StageGraph) -> Dict[str, Callable]:
+    """Work functions realizing each StageSpec's true cost with sleeps.
+
+    A stage's fn takes `cost` seconds per item, so with `w` workers it
+    sustains `w / cost` batches/s — exactly the simulator's service rate
+    when `serial_frac == 0`. A non-zero serial fraction is emulated by
+    taking `serial_frac * cost` under a per-stage lock (an approximation
+    of Amdahl scaling: both saturate at `1 / (serial_frac * cost)`, but
+    the knee differs — live differential clusters use 0).
+
+    Sources emit an infinite stream (training never hits EOS); joins
+    pair one item per input; everything else forwards its input.
+    """
+    fns: Dict[str, Callable] = {}
+    for st in spec.stages:
+        serial = st.serial_frac * st.cost
+        par = st.cost - serial
+        lock = threading.Lock() if serial > 1e-9 else None
+
+        def work(lock=lock, serial=serial, par=par):
+            if lock is not None:
+                with lock:
+                    time.sleep(serial)
+            if par > 0:
+                time.sleep(par)
+
+        if not st.inputs:
+            def fn(work=work):
+                work()
+                return 1                       # infinite stream, never EOS
+        elif len(st.inputs) > 1:
+            def fn(*items, work=work):
+                work()
+                return items
+        else:
+            def fn(item, work=work):
+                work()
+                return item
+        fns[st.name] = fn
+    return fns
+
+
+class _TrainerRig:
+    """One live trainer: a ThreadedPipeline plus a consumer thread that
+    models the training loop — it pulls batches and sleeps
+    `model_latency` per batch, so a saturated model back-pressures the
+    pipeline through the (prefetch-bounded) output queue, the live
+    realization of the simulator's `1 / model_latency` throughput cap."""
+
+    def __init__(self, trainer: TrainerSpec, eff_cpus: int,
+                 queue_depth: int = 8):
+        self.trainer = trainer
+        self.pipe = ThreadedPipeline(
+            trainer.pipeline, fns=synthetic_stage_fns(trainer.pipeline),
+            queue_depth=queue_depth,
+            machine=dataclasses.replace(trainer.machine,
+                                        n_cpus=int(eff_cpus)))
+        self._stop = threading.Event()
+        self._consumer = threading.Thread(target=self._model_loop,
+                                          daemon=True)
+        self._consumer.start()
+
+    def _model_loop(self):
+        while not self._stop.is_set():
+            try:
+                self.pipe.get_batch(timeout=0.05)
+            except (queue.Empty, StopIteration):
+                continue
+            if self.trainer.model_latency > 0:
+                time.sleep(self.trainer.model_latency)
+
+    # ---------------------------------------------------------- control ---
+    def set_allocation(self, alloc: Allocation):
+        self.pipe.set_allocation(alloc.workers, alloc.prefetch_mb)
+
+    def set_eff_cpus(self, n: int):
+        self.pipe.machine = dataclasses.replace(self.pipe.machine,
+                                                n_cpus=int(n))
+
+    def counters(self) -> dict:
+        return self.pipe.counters()
+
+    def teardown(self, drain: bool = True, timeout: float = 5.0) -> dict:
+        """Stop the consumer first (so the drain accounting is stable),
+        then shut the pipeline down. drain=True is the clean leave path;
+        drain=False models an OOM kill."""
+        self._stop.set()
+        self._consumer.join(timeout=timeout)
+        acct = self.pipe.shutdown(drain=drain, timeout=timeout)
+        acct["joined"] = acct["joined"] and not self._consumer.is_alive()
+        return acct
+
+
+class LiveFleet(FleetBackend):
+    """Drop-in fleet backend: one real ThreadedPipeline per active
+    trainer, FleetSim's exact driver dialect.
+
+    `seed` is accepted for factory-signature compatibility with FleetSim
+    (thread scheduling is the noise source here, not an RNG).
+    `window_s` is the per-tick measurement window; throughput is the
+    consumed-batch counter delta over the measured elapsed. Call
+    `close()` (or use as a context manager) to tear every rig down and
+    collect the final drop/leak accounting.
+    """
+
+    def __init__(self, cluster: ClusterSpec, seed: int = 0,
+                 window_s: float = 0.1, queue_depth: int = 8):
+        super().__init__(cluster)
+        self.window_s = float(window_s)
+        self.queue_depth = queue_depth
+        self.oom_counts = {t.name: 0 for t in cluster.trainers}
+        self.restart_left = {t.name: 0 for t in cluster.trainers}
+        self.dropped_batches = 0
+        self.crash_lost = 0
+        self.all_joined = True
+        self.rigs: Dict[str, _TrainerRig] = {}
+        self._closed = False
+        for t in cluster.trainers:
+            if t.start_active:
+                self.rigs[t.name] = _TrainerRig(t, t.machine.n_cpus,
+                                                queue_depth)
+
+    # ----------------------------------------------------------- churn ----
+    def _on_join(self, name: str):
+        # a (re)joining machine is a fresh process: no restart debt
+        self.restart_left[name] = 0
+        if name not in self.rigs:
+            self.rigs[name] = _TrainerRig(self.cluster.trainer(name),
+                                          self._base[name], self.queue_depth)
+
+    def _on_leave(self, name: str):
+        rig = self.rigs.pop(name, None)
+        if rig is not None:
+            acct = rig.teardown(drain=True)
+            self.dropped_batches += acct["dropped"]
+            self.all_joined = self.all_joined and acct["joined"]
+
+    @property
+    def oom_count(self) -> int:
+        return sum(self.oom_counts.values())
+
+    # ------------------------------------------------------------ tick ----
+    def apply(self, falloc: FleetAllocation) -> dict:
+        self._advance_events()
+        state = self.machine
+        self._check_falloc(falloc, state)
+        per: Dict[str, dict] = {}
+        measuring: List[tuple] = []
+        for name in state.active:
+            trainer = self.cluster.trainer(name)
+            eff = self._base[name] + int(falloc.grants.get(name, 0))
+            if name not in falloc.allocs:
+                raise KeyError(
+                    f"no allocation proposed for active trainer {name!r}")
+            alloc = falloc.allocs[name]
+            mem = graph_memory_mb(trainer.pipeline, alloc.workers,
+                                  alloc.prefetch_mb)
+            used = int(np.sum(alloc.workers))
+            if self.restart_left[name] > 0:
+                self.restart_left[name] -= 1
+                if self.restart_left[name] == 0 and name not in self.rigs:
+                    # dead window over: relaunch a fresh pipeline process
+                    self.rigs[name] = _TrainerRig(trainer, eff,
+                                                  self.queue_depth)
+                per[name] = {"throughput": 0.0, "mem_mb": mem, "oom": False,
+                             "restarting": True, "used_cpus": used,
+                             "eff_cpus": eff}
+                continue
+            if mem > trainer.machine.mem_mb:
+                # budget-enforced OOM (the simulator's judge, verbatim):
+                # the process is killed — hard stop, no drain — and pays
+                # the same restart window before relaunch
+                self.oom_counts[name] += 1
+                self.restart_left[name] = OOM_RESTART_TICKS
+                rig = self.rigs.pop(name, None)
+                if rig is not None:
+                    acct = rig.teardown(drain=False)
+                    self.crash_lost += max(
+                        0, acct["delivered"] - acct["consumed"])
+                    self.all_joined = self.all_joined and acct["joined"]
+                per[name] = {"throughput": 0.0, "mem_mb": mem, "oom": True,
+                             "restarting": True, "used_cpus": used,
+                             "eff_cpus": eff}
+                continue
+            rig = self.rigs[name]
+            if rig.pipe.machine.n_cpus != eff:
+                rig.set_eff_cpus(eff)
+            rig.set_allocation(alloc)
+            measuring.append((name, rig, mem, used, eff))
+        # one shared measurement window: every allocation above is applied
+        # BEFORE any trainer is measured, so pool re-caps and grant moves
+        # land atomically across the fleet
+        before = {name: rig.counters() for name, rig, *_ in measuring}
+        if measuring:
+            time.sleep(self.window_s)
+        for name, rig, mem, used, eff in measuring:
+            tput = ThreadedPipeline.window_rate(before[name], rig.counters())
+            if used > eff:
+                # sleeps don't contend like real CPUs: charge the sim's
+                # proportional over-subscription slowdown in accounting
+                tput *= eff / used
+            per[name] = {"throughput": tput, "mem_mb": mem, "oom": False,
+                         "restarting": False, "used_cpus": used,
+                         "eff_cpus": eff}
+        self.time += 1
+        tput = sum(m["throughput"] for m in per.values())
+        mem = sum(m["mem_mb"] for m in per.values())
+        used = sum(min(m["used_cpus"], m["eff_cpus"]) for m in per.values())
+        return {"throughput": tput, "mem_mb": mem, "used_cpus": int(used),
+                "oom": any(m["oom"] for m in per.values()),
+                "restarting": any(m["restarting"] for m in per.values()),
+                "n_active": len(state.active), "pool": self.pool,
+                "per_trainer": per}
+
+    # -------------------------------------------------------- teardown ----
+    def close(self) -> dict:
+        """Tear down every live rig; returns the final accounting the
+        churn soak test asserts on: clean-teardown batch drops, OOM-crash
+        losses, and whether every thread ever started was joined."""
+        if not self._closed:
+            self._closed = True
+            for name in list(self.rigs):
+                acct = self.rigs.pop(name).teardown(drain=True)
+                self.dropped_batches += acct["dropped"]
+                self.all_joined = self.all_joined and acct["joined"]
+            self._acct = {"dropped_batches": self.dropped_batches,
+                          "crash_lost": self.crash_lost,
+                          "all_joined": self.all_joined,
+                          "oom_count": self.oom_count}
+        return self._acct
+
+    def __enter__(self) -> "LiveFleet":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Live clusters: ms-scale stage costs (a window catches tens of batches),
+# serial_frac=0 everywhere (sleep workers realize the analytic service
+# rate exactly), and 5-stage pipelines throughout so the cached r5
+# pretrained agent drives every trainer.
+# ---------------------------------------------------------------------------
+
+def live_linear_pipeline(udf_cost: float = 0.03, base_cost: float = 0.004,
+                         batch_mb: float = 8.0) -> StageGraph:
+    """Skewed 5-stage chain: the UDF dominates, so even placement starves
+    it — the live analog of the paper's Fig. 3 cost shares."""
+    stages = (
+        StageSpec("src", "source", cost=base_cost, serial_frac=0.0,
+                  mem_per_worker_mb=64),
+        StageSpec("shuffle", "shuffle", cost=base_cost, serial_frac=0.0,
+                  mem_per_worker_mb=64),
+        StageSpec("feature_udf", "udf", cost=udf_cost, serial_frac=0.0,
+                  mem_per_worker_mb=64),
+        StageSpec("batch", "batch", cost=base_cost, serial_frac=0.0,
+                  mem_per_worker_mb=64),
+        StageSpec("prefetch", "prefetch", cost=base_cost, serial_frac=0.0,
+                  mem_per_worker_mb=64, mem_per_item_mb=batch_mb),
+    )
+    return StageGraph("live_lin5", stages, batch_mb=batch_mb)
+
+
+def live_join_pipeline(batch_mb: float = 8.0) -> StageGraph:
+    """5-stage multi-source join DAG at live (ms) scale: sparse reads and
+    the feature UDF carry the weight, per Zhao et al."""
+    stages = (
+        StageSpec("dense_src", "source", cost=0.004, serial_frac=0.0,
+                  mem_per_worker_mb=64),
+        StageSpec("sparse_src", "source", cost=0.012, serial_frac=0.0,
+                  mem_per_worker_mb=64),
+        StageSpec("join", "join", cost=0.002, serial_frac=0.0,
+                  mem_per_worker_mb=48,
+                  inputs=("dense_src", "sparse_src")),
+        StageSpec("feature_udf", "udf", cost=0.012, serial_frac=0.0,
+                  mem_per_worker_mb=64, inputs=("join",)),
+        StageSpec("prefetch", "prefetch", cost=0.004, serial_frac=0.0,
+                  mem_per_worker_mb=64, mem_per_item_mb=batch_mb,
+                  inputs=("feature_udf",)),
+    )
+    return StageGraph("live_join5", stages, batch_mb=batch_mb,
+                      edge_buffer_mb=8.0)
+
+
+def live_demo_cluster(ticks: int = 160, pool: int = 10) -> ClusterSpec:
+    """The canonical 3-trainer live fleet with churn (fig7_fleet --live).
+
+    Heterogeneity mirrors demo_cluster at live scale: "alpha" is the
+    UDF-skewed chain AND memory-tight — an even pool grant pushes its
+    even worker split past the 3 GB line (the Fig. 5B crash-loop,
+    measured on real executors), while the coordinator's admission
+    control clamps under it (and its pool grants carry real marginal
+    throughput, +2 CPUs on the UDF lifting 200 -> 250 b/s); "beta" is
+    the join DAG, joining a quarter
+    of the way in; "gamma" saturates its model at 50 b/s with a handful
+    of CPUs, so pool granted there is pure waste. Churn covers all four
+    event kinds: join, machine resize, pool re-cap, leave.
+    """
+    trainers = (
+        TrainerSpec("alpha", live_linear_pipeline(),
+                    MachineSpec(n_cpus=10, mem_mb=3000.0),
+                    model_latency=0.002),
+        TrainerSpec("beta", live_join_pipeline(),
+                    MachineSpec(n_cpus=8, mem_mb=8192.0),
+                    model_latency=0.004, start_active=False),
+        TrainerSpec("gamma", live_linear_pipeline(udf_cost=0.004),
+                    MachineSpec(n_cpus=6, mem_mb=8192.0),
+                    model_latency=0.02),
+    )
+    events = churn_schedule(ticks, [
+        (0.25, "join", "beta", 0),
+        (0.55, "resize", "alpha", 6),
+        (0.65, "pool", "", 6),
+        (0.80, "leave", "gamma", 0),
+    ])
+    return ClusterSpec("live_fleet3", trainers, shared_pool=pool,
+                       events=events)

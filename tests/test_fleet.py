@@ -205,6 +205,40 @@ def test_coordinator_quarantines_after_oom():
     assert coord.quarantine["a"] == 0
 
 
+def test_coordinator_readmits_and_rearbitrates_after_quarantine():
+    """The quarantine EXIT path: once the clamp window expires the
+    trainer is re-admitted — its agent proposes again (exploration
+    unfrozen) — and the pool grants are re-arbitrated for its return
+    (the entry path alone was covered before)."""
+    cluster = tiny_cluster(pool=8)
+    coord = FleetCoordinator(cluster, seed=0, mem_guard=False,
+                             quarantine_ticks=3, finetune_ticks=40)
+    sim = FleetSim(cluster, seed=0)
+    falloc = coord.propose(cluster, sim.machine)
+    metrics = sim.apply(falloc)
+    metrics["per_trainer"]["a"]["oom"] = True      # synthetic OOM on "a"
+    coord.observe(metrics)
+    assert coord.quarantine["a"] == 3
+    plans = []
+    orig = coord._plan_grants
+    coord._plan_grants = lambda state: (plans.append(coord._tick)
+                                        or orig(state))
+    for _ in range(3):
+        falloc = coord.propose(cluster, sim.machine)
+        # frozen while quarantined: no pending transition to learn from
+        assert coord.tuners["a"]._pending is None
+        coord.observe(sim.apply(falloc))
+    assert coord.quarantine["a"] == 0
+    n_plans = len(plans)
+    falloc = coord.propose(cluster, sim.machine)   # re-admission tick
+    assert len(plans) == n_plans + 1, \
+        "re-admission must re-arbitrate the pool grants"
+    assert coord.tuners["a"]._pending is not None, \
+        "re-admitted trainer must be exploring again"
+    coord.observe(sim.apply(falloc))
+    assert sum(falloc.grants.values()) <= sim.pool
+
+
 def test_fleet_env_wrapper():
     cluster = tiny_cluster(pool=8)
     env = FleetEnv(cluster, seed=0)

@@ -1,0 +1,257 @@
+"""LiveFleet: the fleet plane on real ThreadedPipeline executors.
+
+Three layers of evidence that the simulated fleet plane transfers to
+live execution (the paper's §5 sim-to-real claim, made a standing test):
+
+  - dialect tests: LiveFleet speaks FleetSim's driver contract exactly —
+    grant validation, churn-driven rig lifecycle, budget-enforced
+    OOM/restart semantics;
+  - the fleet differential (tier-1): on a 2-trainer cluster, LiveFleet's
+    MEASURED per-trainer throughput ranks candidate FleetAllocations the
+    same way FleetSim predicts. Rank-based with >= 1.8x designed
+    separation, no absolute-rate assertions, so CI CPU contention cannot
+    reorder it (the fleet extension of tests/test_sim_vs_executor.py);
+  - (slow) a churn soak — FleetCoordinator over a join/leave/resize/pool
+    schedule for a few hundred ticks with zero drops, zero OOMs, and
+    every thread joined — and the fig7 --live acceptance run.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.fleet_coordinator import FleetCoordinator
+from repro.data.fleet import (ClusterSpec, FleetAllocation, FleetEvent,
+                              FleetSim, TrainerSpec, churn_schedule)
+from repro.data.live_fleet import (LiveFleet, live_demo_cluster,
+                                   live_join_pipeline, live_linear_pipeline,
+                                   synthetic_stage_fns)
+from repro.data.simulator import (Allocation, MachineSpec, OOM_RESTART_TICKS,
+                                  graph_memory_mb)
+
+
+def diff_cluster() -> ClusterSpec:
+    """2-trainer differential cluster: the UDF-skewed chain + the join
+    DAG, no model cap and roomy memory so throughput alone is measured."""
+    return ClusterSpec("live_diff2", (
+        TrainerSpec("lin", live_linear_pipeline(),
+                    MachineSpec(n_cpus=10, mem_mb=8192.0)),
+        TrainerSpec("dag", live_join_pipeline(),
+                    MachineSpec(n_cpus=16, mem_mb=8192.0)),
+    ), shared_pool=0)
+
+
+def falloc(lin_workers, dag_workers, prefetch_mb: float = 16.0):
+    return FleetAllocation({
+        "lin": Allocation(np.asarray(lin_workers, dtype=int), prefetch_mb),
+        "dag": Allocation(np.asarray(dag_workers, dtype=int), prefetch_mb)})
+
+
+def _wait_threads_settle(base, timeout=3.0):
+    """Poll until every thread not in `base` has exited (teardown joins
+    are bounded, but give the OS scheduler a moment)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        extra = [t for t in threading.enumerate() if t not in base]
+        if not extra:
+            return []
+        time.sleep(0.02)
+    return [t for t in threading.enumerate() if t not in base]
+
+
+# --------------------------------------------------------------- dialect ---
+def test_live_fleet_enforces_the_grant_and_alloc_contracts():
+    cluster = ClusterSpec("contract", (
+        TrainerSpec("a", live_linear_pipeline(),
+                    MachineSpec(n_cpus=8, mem_mb=8192.0)),
+        TrainerSpec("b", live_linear_pipeline(),
+                    MachineSpec(n_cpus=8, mem_mb=8192.0)),
+    ), shared_pool=4)
+    ones = {n: Allocation(np.ones(5, dtype=int), 16.0) for n in ("a", "b")}
+    with LiveFleet(cluster, window_s=0.02) as lf:
+        with pytest.raises(ValueError, match="exceed shared pool"):
+            lf.apply(FleetAllocation(dict(ones), {"a": 3, "b": 2}))
+        with pytest.raises(ValueError, match="unknown trainers"):
+            lf.apply(FleetAllocation(dict(ones), {"nope": 1}))
+        with pytest.raises(KeyError, match="active trainer"):
+            lf.apply(FleetAllocation({"a": ones["a"]}))
+        m = lf.apply(FleetAllocation(dict(ones), {"a": 2, "b": 2}))
+        assert m["n_active"] == 2
+        assert m["per_trainer"]["a"]["eff_cpus"] == 8 + 2
+        # aggregates are the sum of the per-trainer breakdown
+        assert m["throughput"] == pytest.approx(
+            sum(p["throughput"] for p in m["per_trainer"].values()))
+
+
+def test_live_fleet_churn_drives_rig_lifecycle_cleanly():
+    """join spins a pipeline up, leave tears one down with zero dropped
+    batches, resize re-caps before the next window."""
+    cluster = ClusterSpec("churny", (
+        TrainerSpec("a", live_linear_pipeline(),
+                    MachineSpec(n_cpus=8, mem_mb=8192.0)),
+        TrainerSpec("b", live_linear_pipeline(),
+                    MachineSpec(n_cpus=8, mem_mb=8192.0),
+                    start_active=False),
+    ), shared_pool=0, events=(
+        FleetEvent(2, "join", "b"),
+        FleetEvent(4, "resize", "a", n_cpus=4),
+        FleetEvent(6, "leave", "b"),
+    ))
+    base = set(threading.enumerate())
+    lf = LiveFleet(cluster, window_s=0.03)
+    assert set(lf.rigs) == {"a"}
+    seen = []
+    for _ in range(8):
+        st = lf.machine
+        seen.append((st.tick, st.active, dict(st.base_cpus)))
+        fa = FleetAllocation(
+            {n: Allocation(np.ones(5, dtype=int), 16.0) for n in st.active})
+        m = lf.apply(fa)
+        if st.tick == 2:
+            assert set(lf.rigs) == {"a", "b"}          # join spun b up
+        if st.tick == 4:
+            assert m["per_trainer"]["a"]["eff_cpus"] == 4
+        if st.tick == 6:
+            assert set(lf.rigs) == {"a"}               # leave tore b down
+    assert seen[2] == (2, ("a", "b"), {"a": 8, "b": 8})
+    assert seen[4][2] == {"a": 4, "b": 8}
+    assert seen[6] == (6, ("a",), {"a": 4})
+    acct = lf.close()
+    assert acct["dropped_batches"] == 0
+    assert acct["oom_count"] == 0
+    assert acct["all_joined"]
+    assert _wait_threads_settle(base) == []
+
+
+def test_live_fleet_oom_semantics_match_the_sim():
+    """An over-budget allocation is an OOM judged by the sim's own
+    graph_memory_mb, pays OOM_RESTART_TICKS of dead window, then a fresh
+    pipeline relaunches — the coordinator's quarantine contract."""
+    pipe = live_linear_pipeline()
+    cluster = ClusterSpec("oomy", (
+        TrainerSpec("a", pipe, MachineSpec(n_cpus=8, mem_mb=2500.0)),
+    ), shared_pool=0)
+    fat = FleetAllocation(
+        {"a": Allocation(np.full(5, 2, dtype=int), 1024.0)})
+    assert graph_memory_mb(pipe, fat.allocs["a"].workers, 1024.0) > 2500.0
+    ok = FleetAllocation({"a": Allocation(np.ones(5, dtype=int), 16.0)})
+    with LiveFleet(cluster, window_s=0.01) as lf:
+        m = lf.apply(fat)
+        assert m["oom"] and m["restarting"]
+        assert lf.oom_count == 1
+        assert "a" not in lf.rigs                   # process was killed
+        for i in range(OOM_RESTART_TICKS):
+            m = lf.apply(ok)                        # safe alloc proposed
+            assert m["restarting"] and not m["oom"]
+            assert m["throughput"] == 0.0
+        assert "a" in lf.rigs                       # relaunched
+        m = lf.apply(ok)
+        assert not m["restarting"]
+
+
+def test_synthetic_stage_fns_shapes():
+    spec = live_join_pipeline()
+    fns = synthetic_stage_fns(spec)
+    assert set(fns) == {s.name for s in spec.stages}
+    assert fns["dense_src"]() == 1                  # source: no args
+    assert fns["join"]("x", "y") == ("x", "y")      # join: one per input
+    assert fns["feature_udf"]("z") == "z"           # unary: forwards
+
+
+# ---------------------------------------------------------- differential ---
+def test_fleet_differential_live_ranks_match_sim():
+    """THE fleet differential: LiveFleet's measured per-trainer
+    throughput must rank candidate FleetAllocations the way FleetSim
+    predicts. Candidates are designed with >= 1.8x predicted separation
+    per trainer so thread-timing noise cannot reorder them."""
+    cluster = diff_cluster()
+    candidates = [
+        falloc([1, 1, 1, 1, 1], [1, 1, 1, 1, 1]),   # everything starved
+        falloc([1, 1, 3, 1, 1], [1, 2, 1, 2, 1]),   # udf partly fed
+        falloc([1, 1, 6, 1, 1], [2, 4, 1, 4, 2]),   # oracle-shaped
+    ]
+    predicted = {"lin": [], "dag": []}
+    for fa in candidates:
+        per = FleetSim(cluster, seed=0).apply(fa)["per_trainer"]
+        for n in predicted:
+            predicted[n].append(per[n]["throughput"])
+    for n, preds in predicted.items():
+        gaps = sorted(preds)
+        for lo, hi in zip(gaps, gaps[1:]):
+            assert hi / lo >= 1.8, f"test design: {n} separation too small"
+
+    measured = {"lin": [], "dag": []}
+    with LiveFleet(cluster, window_s=0.25) as lf:
+        for fa in candidates:
+            for _ in range(2):                      # settle the new alloc
+                lf.apply(fa)
+            per = lf.apply(fa)["per_trainer"]
+            for n in measured:
+                measured[n].append(per[n]["throughput"])
+    for n in predicted:
+        assert np.argsort(predicted[n]).tolist() \
+            == np.argsort(measured[n]).tolist(), \
+            (f"{n}: sim ranks {predicted[n]} but live measures "
+             f"{measured[n]}")
+
+
+# ------------------------------------------------------------ slow suite ---
+@pytest.mark.slow
+def test_churn_soak_no_drops_no_ooms_no_leaks():
+    """Drive the FleetCoordinator over a dense join/leave/resize/pool
+    schedule on LiveFleet for a few hundred ticks: zero dropped batches,
+    zero OOMs, and every executor thread joined on teardown."""
+    ticks = 300
+    mk = live_linear_pipeline
+    cluster = ClusterSpec("soak3", (
+        TrainerSpec("a", mk(), MachineSpec(n_cpus=8, mem_mb=4096.0)),
+        TrainerSpec("b", live_join_pipeline(),
+                    MachineSpec(n_cpus=8, mem_mb=4096.0),
+                    model_latency=0.01),
+        TrainerSpec("c", mk(udf_cost=0.004),
+                    MachineSpec(n_cpus=6, mem_mb=3000.0),
+                    model_latency=0.02),
+    ), shared_pool=6, events=churn_schedule(ticks, [
+        (0.10, "leave", "b", 0),
+        (0.20, "join", "b", 0),
+        (0.30, "resize", "a", 5),
+        (0.40, "pool", "", 2),
+        (0.50, "resize", "a", 8),
+        (0.60, "leave", "c", 0),
+        (0.70, "pool", "", 6),
+        (0.80, "join", "c", 0),
+        (0.90, "resize", "c", 4),
+    ]))
+    base = set(threading.enumerate())
+    lf = LiveFleet(cluster, window_s=0.02)
+    coord = FleetCoordinator(cluster, seed=0, finetune_ticks=60)
+    for _ in range(ticks):
+        st = lf.machine
+        fa = coord.propose(cluster, st)
+        coord.observe(lf.apply(fa))
+    acct = lf.close()
+    assert acct["oom_count"] == 0, acct
+    assert acct["dropped_batches"] == 0, acct
+    assert acct["crash_lost"] == 0, acct
+    assert acct["all_joined"], acct
+    leaked = _wait_threads_settle(base)
+    assert leaked == [], f"leaked threads: {leaked}"
+
+
+@pytest.mark.slow
+def test_fig7_fleet_live_acceptance():
+    """ISSUE 3 acceptance: fig7_fleet --live completes on the 3-trainer
+    live cluster with churn; the coordinator beats fleet_even on
+    MEASURED aggregate throughput with zero OOMs, zero dropped batches,
+    and every thread joined."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks import fig7_fleet
+    summary = fig7_fleet.run_live(ticks=160, seed=0, quiet=True)
+    coord = summary["fleet_intune"]
+    assert summary["_speedups"]["intune_vs_even"] > 1.0, summary
+    assert coord["oom_count"] == 0, summary
+    assert coord["dropped_batches"] == 0, summary
+    assert coord["all_joined"] and summary["fleet_even"]["all_joined"]
