@@ -1,12 +1,23 @@
-"""Shared benchmark machinery: cached pretrained agents, timeline runner."""
+"""Shared benchmark machinery: cached pretrained agents + legacy shims.
+
+The timeline runners that used to live here (`run_static` /
+`run_optimizer` / `run_fleet_optimizer` / `run_intune*`) are now
+one-PR deprecation shims over `repro.api.Session` — the single driver
+loop every benchmark and example delegates to. New code should use
+`repro.api` directly; the shims exist so external callers of the old
+dialect get one release of warning instead of a break, and they
+reproduce the legacy loops' outputs exactly (the fig5 golden suite
+enforces this byte-for-byte on the linear chains).
+"""
 from __future__ import annotations
 
 import json
 import os
+import warnings
 
-import numpy as np
-
-from repro.core import baselines as B
+from repro.api import (ControllerBackend, DeadWindow, FrozenPolicy,
+                       RELAUNCH_TICKS, ResizeEvent, Session, SimBackend,
+                       as_backend, resize_events)
 from repro.core.controller import InTune
 from repro.core.pretrain import load_agent_state, pretrain, save_agent
 from repro.data.simulator import Allocation, MachineSpec, PipelineSim
@@ -15,7 +26,11 @@ AGENT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                          "agents")
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
-RELAUNCH_TICKS = 20   # checkpoint + relaunch dead time for *-Adaptive
+
+__all__ = ["AGENT_DIR", "OUT_DIR", "RELAUNCH_TICKS", "ReadaptPolicy",
+           "get_agent_state", "save_json", "make_tuner",
+           "make_fleet_coordinator", "run_static", "run_optimizer",
+           "run_fleet_optimizer", "run_intune", "run_intune_protocol"]
 
 
 def get_agent_state(n_stages: int, head: str = "factored",
@@ -36,136 +51,41 @@ def save_json(name: str, payload):
         json.dump(payload, f, indent=1, default=float)
 
 
-def run_static(spec, machine, alloc, ticks: int, *, resizes=None,
-               readapt=None, seed: int = 0):
-    """Timeline for a fixed (or relaunch-adapted) allocation.
+class ReadaptPolicy(FrozenPolicy):
+    """The *-Adaptive benchmark protocol: hold `alloc` (FrozenPolicy);
+    on every scheduled resize tick, re-profile via `readapt(spec,
+    machine, seed + tick)` — the manual checkpoint+relaunch behavior,
+    whose dead window the caller schedules as DeadWindow events. With
+    `readapt=None` this IS FrozenPolicy."""
 
-    resizes: [(tick, n_cpus)]; readapt: fn(spec, machine, seed)->Allocation
-    applied after each resize with a RELAUNCH_TICKS dead window (the
-    paper's manual-intervention baseline behavior).
-    """
-    sim = PipelineSim(spec, machine, seed=seed)
-    tput, mem, used = [], [], []
-    dead = 0
-    cur = alloc
-    resizes = dict(resizes or [])
-    for t in range(ticks):
-        if t in resizes:
-            sim.resize(resizes[t])
-            if readapt is not None:
-                cur = readapt(spec, sim.machine, seed + t)
-                dead = RELAUNCH_TICKS
-        if dead > 0:
-            dead -= 1
-            m = {"throughput": 0.0, "mem_mb": 0.0,
-                 "used_cpus": 0, "oom": False}
-            sim.time += 1
-        else:
-            m = sim.apply(cur)
-        tput.append(m["throughput"])
-        used.append(min(m["used_cpus"], sim.machine.n_cpus))
-        mem.append(m["mem_mb"])
-    return {"throughput": tput, "used_cpus": used, "mem_mb": mem,
-            "oom_count": sim.oom_count,
-            "caps": [resizes.get(t, None) for t in range(ticks)]}
+    name = "static"
+
+    def __init__(self, alloc: Allocation, readapt=None, *, seed: int = 0,
+                 resize_ticks=()):
+        super().__init__(alloc)
+        self._readapt = readapt
+        self._seed = seed
+        self._resize_ticks = frozenset(resize_ticks)
+        self._t = 0
+
+    def propose(self, spec, machine, stats=None) -> Allocation:
+        t = self._t
+        self._t += 1
+        if self._readapt is not None and t in self._resize_ticks:
+            self.alloc = self._readapt(spec, machine, self._seed + t)
+        return self.alloc
 
 
-def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
-                  seed: int = 0, relaunch_dead: int = 0,
-                  sim_factory=PipelineSim, collect=None):
-    """Drive any Optimizer-protocol policy against one authoritative sim.
-
-    The generic loop the protocol exists for: propose -> apply -> observe.
-    `relaunch_dead` > 0 charges the *-Adaptive relaunch window whenever a
-    static policy changes its proposal after a resize (learning policies
-    re-allocate live and should pass 0).
-
-    The same loop drives BOTH planes: `sim_factory(spec, machine, seed=s)`
-    defaults to the single-machine PipelineSim; pass
-    `lambda c, _, seed: FleetSim(c, seed=seed)` with a ClusterSpec to
-    drive a fleet policy (FleetSim speaks the same machine/apply/resize
-    dialect, and FleetAllocation flattens to the same workers/prefetch_mb
-    views the changed-proposal check compares). `collect(t, metrics)`,
-    when given, sees every tick's full metrics dict (per-trainer
-    breakdowns, which the aggregate return drops).
-    """
-    sim = sim_factory(spec, machine, seed=seed)
-    resizes = dict(resizes or [])
-    tput, used, mem = [], [], []
-    dead = 0
-    prev = None
-    for t in range(ticks):
-        if t in resizes:
-            sim.resize(resizes[t])
-        alloc = opt.propose(spec, sim.machine)
-        # capacity the proposal was made against: reading sim.machine
-        # AFTER apply would let a fleet's next-tick churn events fire
-        # early and clamp this tick's used_cpus with t+1 capacity
-        cap = sim.machine.n_cpus
-        changed = prev is not None and (
-            not np.array_equal(alloc.workers, prev.workers)
-            or alloc.prefetch_mb != prev.prefetch_mb)
-        if relaunch_dead and changed:
-            dead = relaunch_dead
-        prev = alloc
-        if dead > 0:
-            dead -= 1
-            sim.time += 1
-            # relaunch window: the pipeline process is down, matching
-            # run_static's dead-window accounting
-            m = {"throughput": 0.0, "mem_mb": 0.0, "oom": False,
-                 "restarting": True, "used_cpus": 0}
-        else:
-            m = sim.apply(alloc)
-        opt.observe(m)
-        if collect is not None:
-            collect(t, m)
-        tput.append(m["throughput"])
-        used.append(min(m["used_cpus"], cap))
-        mem.append(m["mem_mb"])
-    return {"throughput": tput, "used_cpus": used, "mem_mb": mem,
-            "oom_count": sim.oom_count}
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"benchmarks.common.{old} is deprecated; use {new} "
+        f"(repro.api) instead", DeprecationWarning, stacklevel=3)
 
 
-def run_fleet_optimizer(opt, cluster, ticks: int, *, seed: int = 0,
-                        relaunch_dead: int = 0, collect=None,
-                        backend: str = "sim", backend_kw=None):
-    """run_optimizer over a fleet: same loop, the chosen backend
-    authoritative.
-
-    backend="sim" drives the analytic FleetSim; backend="live" drives
-    real ThreadedPipeline executors (repro.data.live_fleet.LiveFleet —
-    same dialect, measured throughput), closed after the run with its
-    drop/leak accounting returned under the "live" result key.
-    `backend_kw` passes backend-specific knobs (e.g. window_s,
-    obs_noise).
-    """
-    kw = dict(backend_kw or {})
-    if backend == "sim":
-        from repro.data.fleet import FleetSim
-        factory = lambda c, _m, seed=0: FleetSim(c, seed=seed, **kw)
-        return run_optimizer(opt, cluster, None, ticks, seed=seed,
-                             relaunch_dead=relaunch_dead,
-                             sim_factory=factory, collect=collect)
-    if backend != "live":
-        raise KeyError(f"unknown fleet backend {backend!r}; "
-                       f"known: ['sim', 'live']")
-    from repro.data.live_fleet import LiveFleet
-    created = []
-
-    def factory(c, _m, seed=0):
-        lf = LiveFleet(c, seed=seed, **kw)
-        created.append(lf)
-        return lf
-
-    try:
-        res = run_optimizer(opt, cluster, None, ticks, seed=seed,
-                            relaunch_dead=relaunch_dead,
-                            sim_factory=factory, collect=collect)
-    finally:
-        accts = [lf.close() for lf in created]
-    res["live"] = accts[0] if accts else {}
-    return res
+def _as_schedule(resizes) -> list:
+    """The legacy loops accepted [(tick, n_cpus), ...] or {tick: n_cpus};
+    normalize to the pair list resize_events lifts."""
+    return list(dict(resizes or []).items())
 
 
 def make_fleet_coordinator(cluster, *, seed: int = 0, head: str = "factored",
@@ -187,33 +107,86 @@ def make_tuner(spec, machine, *, seed: int = 0, head: str = "factored",
                   finetune_ticks=finetune_ticks)
 
 
+# ---------------------------------------------------------------------------
+# Deprecation shims: the legacy driver dialects, delegating to Session.
+# ---------------------------------------------------------------------------
+
+def run_static(spec, machine, alloc, ticks: int, *, resizes=None,
+               readapt=None, seed: int = 0):
+    """DEPRECATED: use repro.api.Session with a frozen/ReadaptPolicy
+    optimizer and ResizeEvent/DeadWindow events."""
+    _deprecated("run_static", "Session(SimBackend(...), ReadaptPolicy(...))")
+    resizes = _as_schedule(resizes)
+    events = resize_events(resizes)
+    if readapt is not None:
+        # the legacy protocol charges the relaunch window at EVERY
+        # scheduled resize tick (even a no-op re-cap re-profiles)
+        events += [DeadWindow(t, RELAUNCH_TICKS) for t, _ in resizes]
+    opt = ReadaptPolicy(alloc, readapt, seed=seed,
+                        resize_ticks=[t for t, _ in resizes])
+    res = Session(SimBackend(spec, machine, seed=seed), opt).run(
+        ticks, events=events)
+    rmap = dict(resizes)
+    res.extras["caps"] = [rmap.get(t, None) for t in range(ticks)]
+    return res
+
+
+def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
+                  seed: int = 0, relaunch_dead: int = 0,
+                  sim_factory=PipelineSim, collect=None):
+    """DEPRECATED: use repro.api.Session over an explicit backend."""
+    _deprecated("run_optimizer", "Session(backend, opt).run(...)")
+    backend = as_backend(sim_factory(spec, machine, seed=seed))
+    return Session(backend, opt, spec=spec).run(
+        ticks, events=resize_events(_as_schedule(resizes)),
+        relaunch_dead=relaunch_dead, collect=collect)
+
+
+def run_fleet_optimizer(opt, cluster, ticks: int, *, seed: int = 0,
+                        relaunch_dead: int = 0, collect=None,
+                        backend: str = "sim", backend_kw=None):
+    """DEPRECATED: use repro.api.Session over a fleet backend (or
+    repro.api.tune(cluster, ...))."""
+    _deprecated("run_fleet_optimizer",
+                "Session(make_backend(..., cluster), opt)")
+    from repro.api import make_backend
+    if backend not in ("sim", "live"):
+        raise KeyError(f"unknown fleet backend {backend!r}; "
+                       f"known: ['sim', 'live']")
+    be = make_backend(backend, cluster, seed=seed, **(backend_kw or {}))
+    try:
+        res = Session(be, opt, spec=cluster).run(
+            ticks, relaunch_dead=relaunch_dead, collect=collect)
+    finally:
+        acct = be.shutdown()
+    if backend == "live":
+        res.extras["live"] = acct
+    return res
+
+
 def run_intune_protocol(spec, machine, ticks: int, *, resizes=None,
                         seed: int = 0, head: str = "factored",
                         finetune_ticks: int = 250):
-    """InTune behind the unified Optimizer protocol: the benchmark's own
-    simulator is authoritative and the tuner only proposes/observes. The
-    protocol path also restarts exploration from the incumbent best
-    (controller.explore_restart_every), which the legacy run_intune path
-    deliberately does not, to keep pre-DAG benchmark numbers unchanged."""
+    """DEPRECATED: build a tuner (make_tuner) and drive it with
+    repro.api.Session over a SimBackend."""
+    _deprecated("run_intune_protocol",
+                "Session(SimBackend(...), make_tuner(...))")
     tuner = make_tuner(spec, machine, seed=seed, head=head,
                        finetune_ticks=finetune_ticks)
-    res = run_optimizer(tuner, spec, machine, ticks, resizes=resizes,
-                        seed=seed)
-    res["tuner"] = tuner
+    res = Session(SimBackend(spec, machine, seed=seed), tuner).run(
+        ticks, events=resize_events(_as_schedule(resizes)))
+    res.extras["tuner"] = tuner
     return res
 
 
 def run_intune(spec, machine, ticks: int, *, resizes=None, seed: int = 0,
                head: str = "factored", finetune_ticks: int = 250):
+    """DEPRECATED: use repro.api.Session over a ControllerBackend (the
+    self-driving paper-protocol path)."""
+    _deprecated("run_intune", "Session(ControllerBackend(make_tuner(...)))")
     tuner = make_tuner(spec, machine, seed=seed, head=head,
                        finetune_ticks=finetune_ticks)
-    resizes = dict(resizes or [])
-    tput, used = [], []
-    for t in range(ticks):
-        if t in resizes:
-            tuner.resize(resizes[t])
-        rec = tuner.tick()
-        tput.append(rec["throughput"])
-        used.append(min(rec["used_cpus"], tuner.env.sim.machine.n_cpus))
-    return {"throughput": tput, "used_cpus": used,
-            "oom_count": tuner.env.sim.oom_count, "tuner": tuner}
+    res = Session(ControllerBackend(tuner)).run(
+        ticks, events=resize_events(_as_schedule(resizes)))
+    res.extras["tuner"] = tuner
+    return res

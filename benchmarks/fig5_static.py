@@ -13,6 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro.api import ControllerBackend, Session, SimBackend
 from repro.core import baselines as B
 from repro.core.optimizer import make_optimizer
 from repro.data.pipeline import (criteo_pipeline, custom_pipeline,
@@ -42,13 +43,16 @@ def run(pipeline: str = "criteo", ticks: int = 600, seeds: int = 50,
         rows[name] = {"pct_of_target": float(
             np.mean(tputs) / spec.target_rate * 100),
             "oom_rate_pct": 100.0 * ooms / len(tputs)}
-    # linear chains keep the legacy self-driving loop so the paper-pipeline
-    # numbers stay exactly as published here; DAGs run through the unified
-    # Optimizer-protocol driver (propose -> apply -> observe + serve-best)
+    # both planes drive through repro.api.Session now. Linear chains keep
+    # the self-driving paper protocol (ControllerBackend clocks
+    # tuner.tick(); the tuner's env sim is authoritative) so the published
+    # numbers stay byte-identical; DAGs run the unified propose -> apply ->
+    # observe path (SimBackend authoritative + serve-best restarts).
+    tuner = common.make_tuner(spec, machine, seed=0)
     if spec.is_linear:
-        res = common.run_intune(spec, machine, ticks, seed=0)
+        res = Session(ControllerBackend(tuner)).run(ticks)
     else:
-        res = common.run_intune_protocol(spec, machine, ticks, seed=0)
+        res = Session(SimBackend(spec, machine, seed=0), tuner).run(ticks)
     steady = np.mean(res["throughput"][-150:])
     rows["intune"] = {"pct_of_target": float(
         steady / spec.target_rate * 100),

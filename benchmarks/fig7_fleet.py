@@ -6,7 +6,7 @@ per-machine, sharing elastically provisioned CPU. This driver runs the
 canonical 4-machine heterogeneous fleet (repro.data.fleet.demo_cluster —
 two linear DLRM chains + the multi-source join DAG, 6-64 GB hosts, a
 shared elastic pool, and join/shrink/leave churn) under every fleet
-policy, all through the same `common.run_optimizer` propose -> apply ->
+policy, all through the same `repro.api.Session` propose -> apply ->
 observe loop used for single machines:
 
   fleet_even / fleet_proportional    static pool splits + memory-blind
@@ -36,6 +36,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro.api import FleetSimBackend, Session, tune
 from repro.core.optimizer import make_fleet_optimizer
 from repro.data.fleet import demo_cluster
 
@@ -86,9 +87,8 @@ def run(ticks: int = 1200, seed: int = 0, quiet: bool = False) -> dict:
             # adapt to churn by checkpoint + relaunch
             dead = 0 if name == "fleet_oracle" else common.RELAUNCH_TICKS
         store: dict = {}
-        r = common.run_fleet_optimizer(opt, cluster, ticks, seed=seed,
-                                       relaunch_dead=dead,
-                                       collect=_collector(store))
+        r = Session(FleetSimBackend(cluster, seed=seed), opt).run(
+            ticks, relaunch_dead=dead, collect=_collector(store))
         runs[name] = r
         per_machine[name] = store
 
@@ -166,9 +166,9 @@ def run_live(ticks: int = 160, window_s: float = 0.12, seed: int = 0,
         else:
             opt = make_fleet_optimizer(name, cluster, seed=seed)
             dead = dead_ticks
-        runs[name] = common.run_fleet_optimizer(
-            opt, cluster, ticks, seed=seed, relaunch_dead=dead,
-            backend="live", backend_kw={"window_s": window_s})
+        runs[name] = tune(cluster, optimizer=opt, backend="live",
+                          ticks=ticks, seed=seed, relaunch_dead=dead,
+                          backend_kw={"window_s": window_s})
 
     summary = {}
     for name, r in runs.items():

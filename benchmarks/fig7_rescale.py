@@ -12,6 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro.api import (ControllerBackend, DeadWindow, RELAUNCH_TICKS,
+                       Session, SimBackend, resize_events)
 from repro.core import baselines as B
 from repro.data.pipeline import criteo_pipeline, custom_pipeline
 from repro.data.simulator import MachineSpec, PipelineSim, resize_schedule
@@ -28,9 +30,16 @@ def run(pipeline: str = "criteo", ticks: int = 1500,
         alloc = fn(spec, MachineSpec(n_cpus=32, mem_mb=65536), 0) \
             if fn in (B.autotune_like, B.plumber_like) \
             else fn(spec, MachineSpec(n_cpus=32, mem_mb=65536))
-        r = common.run_static(spec, machine, alloc, ticks, resizes=resizes,
-                              readapt=readapt)
-        out[name] = r
+        # *-Adaptive policies re-profile at every scheduled resize and pay
+        # the checkpoint+relaunch window for it (explicit DeadWindows);
+        # frozen policies just ride the ResizeEvents
+        events = resize_events(resizes)
+        if readapt is not None:
+            events += [DeadWindow(t, RELAUNCH_TICKS) for t, _ in resizes]
+        opt = common.ReadaptPolicy(alloc, readapt, seed=0,
+                                   resize_ticks=[t for t, _ in resizes])
+        out[name] = Session(SimBackend(spec, machine, seed=0), opt).run(
+            ticks, events=events)
 
     static("unoptimized", B.unoptimized, None)
     static("autotune", B.autotune_like, None)          # never adapts
@@ -40,8 +49,9 @@ def run(pipeline: str = "criteo", ticks: int = 1500,
            lambda s, m, seed: B.plumber_like(s, m, seed))
     static("heuristic_adaptive", B.heuristic_even,
            lambda s, m, seed: B.heuristic_even(s, m))
-    res = common.run_intune(spec, machine, ticks, resizes=resizes, seed=0,
-                            finetune_ticks=150)
+    tuner = common.make_tuner(spec, machine, seed=0, finetune_ticks=150)
+    res = Session(ControllerBackend(tuner)).run(
+        ticks, events=resize_events(resizes))
     out["intune"] = {k: res[k] for k in
                      ("throughput", "used_cpus", "oom_count")}
 

@@ -6,6 +6,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro.api import ControllerBackend, Session
 from repro.core import baselines as B
 from repro.data.pipeline import (PipelineSpec, StageSpec, criteo_pipeline)
 from repro.data.simulator import MachineSpec, PipelineSim
@@ -43,8 +44,9 @@ def _autotune_mean(spec, machine, seeds=15):
 
 
 def _intune_steady(spec, machine, ticks=500):
-    r = common.run_intune(spec, machine, ticks, seed=0, finetune_ticks=250)
-    return float(np.mean(r["throughput"][-100:]))
+    tuner = common.make_tuner(spec, machine, seed=0)
+    r = Session(ControllerBackend(tuner)).run(ticks)
+    return float(np.mean(r.throughput[-100:]))
 
 
 def run(quiet: bool = False) -> dict:

@@ -10,11 +10,13 @@ the compute-side elastic path: mesh re-planning + checkpoint resharding.
 """
 import numpy as np
 
+from repro.api import (ControllerBackend, FrozenPolicy, Session, SimBackend,
+                       resize_events)
 from repro.core import baselines as B
 from repro.core.controller import InTune
 from repro.core.pretrain import pretrain
 from repro.data.pipeline import criteo_pipeline
-from repro.data.simulator import MachineSpec, PipelineSim, resize_schedule
+from repro.data.simulator import MachineSpec, resize_schedule
 from repro.train.elastic import ElasticCoordinator
 
 
@@ -22,29 +24,25 @@ def main():
     spec = criteo_pipeline()
     ticks = 1000
     resizes = resize_schedule(ticks)
+    events = resize_events(resizes)
     print("resize schedule:", resizes)
 
     print("\npretraining agent (offline simulator pass)...")
     agent = pretrain(5, episodes=30, ticks=250, verbose=False,
                      head="factored")
 
+    # InTune rides the ResizeEvents live (zero relaunches): the
+    # self-driving paper protocol behind the unified Session driver
     tuner = InTune(spec, MachineSpec(n_cpus=32), seed=0, head="factored",
                    pretrained=agent.state_dict(), finetune_ticks=100)
-    rmap = dict(resizes)
-    intune_t = []
-    for t in range(ticks):
-        if t in rmap:
-            tuner.resize(rmap[t])
-        intune_t.append(tuner.tick()["throughput"])
+    intune_t = Session(ControllerBackend(tuner)).run(
+        ticks, events=events).throughput
 
-    # frozen AUTOTUNE (configured once for 32 CPUs)
-    sim = PipelineSim(spec, MachineSpec(n_cpus=32))
+    # frozen AUTOTUNE (configured once for 32 CPUs), same event stream
     alloc = B.autotune_like(spec, MachineSpec(n_cpus=32), 0)
-    auto_t = []
-    for t in range(ticks):
-        if t in rmap:
-            sim.resize(rmap[t])
-        auto_t.append(sim.apply(alloc)["throughput"])
+    auto_t = Session(SimBackend(spec, MachineSpec(n_cpus=32)),
+                     FrozenPolicy(alloc)).run(ticks,
+                                              events=events).throughput
 
     seg = ticks // len(resizes)
     print(f"\n{'window':>10s} {'cap':>5s} {'InTune':>8s} {'AUTOTUNE':>9s} "

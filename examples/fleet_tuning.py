@@ -14,6 +14,7 @@ cluster (repro.data.fleet.demo_cluster):
 """
 import numpy as np
 
+from repro.api import FleetSimBackend, Session
 from repro.core import baselines as B
 from repro.core.fleet_coordinator import FleetCoordinator
 from repro.core.pretrain import pretrain
@@ -54,28 +55,28 @@ def run_coordinator(cluster, ticks):
                               head="factored").state_dict()
                   for n in lengths}
     coord = FleetCoordinator(cluster, pretrained=pretrained, seed=0)
-    sim = FleetSim(cluster, seed=0)
+    backend = FleetSimBackend(cluster, seed=0)
+    win = ticks // 6
     tputs = []
-    for t in range(ticks):
-        state = sim.machine
-        metrics = sim.apply(coord.propose(cluster, state))
-        coord.observe(metrics)
-        tputs.append(metrics["throughput"])
-        win = ticks // 6
+
+    def report(t, tel):
+        tputs.append(tel.throughput)
         if (t + 1) % win == 0:
             grants = " ".join(f"{k}:+{v}" for k, v in coord.grants.items())
             print(f"  ticks {t + 1 - win:4d}-{t + 1:4d}: "
                   f"mean {np.mean(tputs[-win:]):6.2f} b/s "
-                  f"over {metrics['n_active']} machines | grants {grants}")
+                  f"over {tel['n_active']} machines | grants {grants}")
+
+    res = Session(backend, coord).run(ticks, collect=report)
     # score against the ideal fleet (per-tick oracle, no churn cost)
     ref = FleetSim(cluster, seed=0)
     oracle = np.mean([
         ref.apply(B.fleet_oracle(cluster, ref.machine))["throughput"]
         for _ in range(ticks)])
-    mean = float(np.mean(tputs))
+    mean = float(np.mean(res.throughput))
     print(f"\ncoordinator mean {mean:.2f} b/s = "
           f"{100 * mean / oracle:.0f}% of fleet oracle "
-          f"(OOMs: {sim.oom_count})")
+          f"(OOMs: {res.oom_count})")
 
 
 if __name__ == "__main__":

@@ -1,31 +1,32 @@
 """Drive the FleetCoordinator on REAL executors: a 60-tick live fleet.
 
-The same propose -> apply -> observe loop as examples/fleet_tuning.py,
-but the authoritative backend is LiveFleet — one ThreadedPipeline per
-trainer, measured (not simulated) throughput. Runs in ~10s.
+The same `repro.api.Session` loop as examples/fleet_tuning.py, but the
+authoritative backend is LiveFleet — one ThreadedPipeline per trainer,
+measured (not simulated) throughput. Runs in ~10s.
 
     PYTHONPATH=src python examples/live_fleet.py
 """
+from repro.api import LiveFleetBackend, Session
 from repro.core.fleet_coordinator import FleetCoordinator
-from repro.data.live_fleet import LiveFleet, live_demo_cluster
+from repro.data.live_fleet import live_demo_cluster
 
 
 def main(ticks: int = 60, window_s: float = 0.1):
     cluster = live_demo_cluster(ticks)
     coord = FleetCoordinator(cluster, seed=0, finetune_ticks=20)
-    with LiveFleet(cluster, window_s=window_s) as fleet:
-        for t in range(ticks):
-            state = fleet.machine
-            falloc = coord.propose(cluster, state)
-            metrics = fleet.apply(falloc)
-            coord.observe(metrics)
-            if t % 10 == 0:
-                per = " ".join(
-                    f"{n}:{m['throughput']:6.1f}"
-                    for n, m in metrics["per_trainer"].items())
-                print(f"tick {t:3d} | active {len(state.active)} | "
-                      f"measured {metrics['throughput']:7.1f} b/s | {per}")
-        acct = fleet.close()
+
+    def report(t, tel):
+        if t % 10 == 0:
+            per = " ".join(
+                f"{n}:{m['throughput']:6.1f}"
+                for n, m in tel["per_trainer"].items())
+            print(f"tick {t:3d} | active {tel['n_active']} | "
+                  f"measured {tel.throughput:7.1f} b/s | {per}")
+
+    with Session(LiveFleetBackend(cluster, window_s=window_s),
+                 coord) as session:
+        session.run(ticks, collect=report)
+        acct = session.close()
     print(f"\nmeasured fleet run done: OOMs {acct['oom_count']}, "
           f"dropped batches {acct['dropped_batches']}, "
           f"all threads joined: {acct['all_joined']}")

@@ -17,6 +17,7 @@ twice:
 """
 import numpy as np
 
+from repro.api import Session, SimBackend
 from repro.core.controller import InTune
 from repro.core.optimizer import make_optimizer
 from repro.core.pretrain import pretrain
@@ -86,19 +87,19 @@ def run_rl_tuning(spec, ticks: int = 300):
     tuner = InTune(spec, machine, seed=0, head="factored",
                    pretrained=agent.state_dict(), finetune_ticks=250)
 
-    # the unified Optimizer-protocol loop every driver uses
-    drive = PipelineSim(spec, machine, seed=0)
-    for t in range(ticks):
-        alloc = tuner.propose(spec, drive.machine)
-        metrics = drive.apply(alloc)
-        tuner.observe(metrics)
+    # the unified Session loop every driver uses (repro.api)
+    backend = SimBackend(spec, machine, seed=0)
+
+    def report(t, tel):
         if (t + 1) % 75 == 0:
-            print(f"  tick {t + 1:3d}: {metrics['throughput']:.2f} b/s "
-                  f"workers {alloc.workers}")
-    final = drive.apply(tuner.allocation)["throughput"]
+            print(f"  tick {t + 1:3d}: {tel.throughput:.2f} b/s "
+                  f"workers {tuner.allocation.workers}")
+
+    Session(backend, tuner).run(ticks, collect=report)
+    final = backend.sim.apply(tuner.allocation)["throughput"]
     print(f"InTune after {ticks} ticks: {final:.2f} batches/s = "
           f"{100 * final / oracle_tput:.0f}% of oracle "
-          f"(OOMs: {drive.oom_count})")
+          f"(OOMs: {backend.oom_count})")
 
 
 if __name__ == "__main__":

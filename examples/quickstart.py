@@ -1,29 +1,66 @@
-"""Quickstart: wrap a real threaded data pipeline with InTune (Listing 1).
+"""Quickstart: the one-call API, then drop-in tuning of a real pipeline.
 
-Builds the paper's 5-stage DLRM ingestion pipeline with REAL thread pools
-over the synthetic Criteo stream, attaches the InTune controller, and lets
-it re-allocate workers live while a tiny DLRM consumes batches.
+Three escalating integrations of the paper's controller (§4.4, Listing 1),
+all through `repro.api` — the single runtime API over every substrate:
+
+  1. `tune(...)` — one line from a pipeline spec to a tuned run on the
+     analytic simulator (offline capacity planning / benchmarks).
+  2. `tune(..., backend="live")` — the SAME line, now driving a real
+     ThreadedPipeline: worker threads realize each stage's true cost and
+     throughput is measured, not modeled.
+  3. Drop-in: wrap YOUR pipeline (real stage fns over the synthetic
+     Criteo stream) with `ExecutorBackend.wrap` and run the tuning
+     Session in a background thread while the training loop consumes
+     batches — InTune re-allocates the worker pools live under a real
+     DLRM training job.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import time
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExecutorBackend, Session, tune
 from repro.configs.base import DLRMConfig
 from repro.core.controller import InTune
 from repro.data.executor import ThreadedPipeline
+from repro.data.live_fleet import live_linear_pipeline
 from repro.data.pipeline import criteo_pipeline
-from repro.data.simulator import MachineSpec
+from repro.data.simulator import MachineSpec, PipelineSim
 from repro.data.synthetic import CriteoStream
 from repro.models import dlrm as dlrm_lib
 from repro.train.optim import make_optimizer
 from repro.train.train_step import make_train_step
 
 
-def main():
+def part1_one_liner():
+    print("== 1. tune() on the analytic simulator ==")
+    spec = criteo_pipeline()
+    machine = MachineSpec(n_cpus=64, mem_mb=65536)
+    res = tune(spec, machine, optimizer="intune", backend="sim",
+               ticks=250, seed=0)
+    steady = float(np.mean(res.throughput[-50:]))
+    base = tune(spec, machine, optimizer="autotune", backend="sim",
+                ticks=1, seed=0)
+    print(f"  InTune steady state {steady:.2f} b/s vs AUTOTUNE-like "
+          f"{base.throughput[0]:.2f} b/s (OOMs: {res.oom_count})")
+
+
+def part2_live_backend():
+    print("== 2. the same call on a REAL threaded pipeline ==")
+    spec = live_linear_pipeline()          # ms-scale costs: measurable
+    machine = MachineSpec(n_cpus=8, mem_mb=4096)
+    res = tune(spec, machine, optimizer="oracle", backend="live",
+               ticks=12, seed=0, backend_kw={"window_s": 0.1})
+    print(f"  measured {float(np.mean(res.throughput[2:])):.1f} b/s "
+          f"over {res.ticks} windows | OOMs {res.oom_count} | "
+          f"threads joined: {res.extras['live']['all_joined']}")
+
+
+def part3_drop_in():
+    print("== 3. drop-in: tune YOUR pipeline under a live training job ==")
     spec = criteo_pipeline(batch_mb=1.0)
     machine = MachineSpec(n_cpus=8, mem_mb=8192)
     stream = CriteoStream(n_sparse=8, n_dense=6, vocab=4096)
@@ -41,12 +78,15 @@ def main():
         ],
         queue_depth=8, item_mb=1.0, machine=machine)
 
-    # ---- wrap it with InTune: one line + a tuning thread --------------
-    tuner = InTune(spec, machine, seed=0,
-                   head="factored", finetune_ticks=50)
-    tuner.attach(pipe)
+    # ---- wrap it: backend + controller + a background Session ---------
+    backend = ExecutorBackend.wrap(pipe, window_s=0.2)
+    tuner = InTune(spec, machine, seed=0, head="factored",
+                   finetune_ticks=50)
+    session = Session(backend, tuner)
+    driver = threading.Thread(target=lambda: session.run(20), daemon=True)
+    driver.start()
 
-    # ---- train a tiny DLRM off the pipeline ---------------------------
+    # ---- train a tiny DLRM off the pipeline (the consumer) ------------
     cfg = DLRMConfig(name="dlrm-qs", n_sparse=8, n_dense=6, embed_dim=16,
                      vocab_sizes=(4096,) * 8, bottom_mlp=(32, 16),
                      top_mlp=(64, 32, 1))
@@ -56,18 +96,21 @@ def main():
     step = jax.jit(make_train_step(
         lambda p, b: dlrm_lib.loss_fn(p, cfg, b), opt))
 
-    print("training 30 steps off the live pipeline...")
+    print("  training 30 steps off the live pipeline...")
     for i in range(30):
         batch = {k: jnp.asarray(v) for k, v in pipe.get_batch().items()}
         params, opt_state, metrics = step(params, opt_state, i, batch)
-        if i % 5 == 0:
-            stats = tuner.live_tick()   # InTune observes + re-allocates
-            print(f"step {i:3d} loss {float(metrics['loss']):.4f} "
-                  f"pipeline tput {stats['throughput']:.1f} b/s "
-                  f"workers {stats['workers']}")
-    pipe.stop()
-    print("done — the controller re-allocated the worker pools live.")
+        if i % 10 == 0:
+            print(f"  step {i:3d} loss {float(metrics['loss']):.4f} "
+                  f"workers {pipe.worker_counts()}")
+    driver.join(timeout=30)
+    acct = session.close()
+    print(f"  done — InTune re-allocated the pools live "
+          f"(final workers {pipe.worker_counts()}, "
+          f"threads joined: {acct['all_joined']})")
 
 
 if __name__ == "__main__":
-    main()
+    part1_one_liner()
+    part2_live_backend()
+    part3_drop_in()

@@ -75,7 +75,10 @@ def main(argv=None):
         batch = stream.feature_udf(stream.raw_block(args.batch))
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, metrics = step_fn(params, opt_state, i, batch)
-        tuner.tick()    # pipeline tuning advances alongside training
+        # pipeline tuning advances in lockstep with training steps (the
+        # decoupled form is Session(ControllerBackend(tuner)).run(...)
+        # in a background thread — see examples/quickstart.py part 3)
+        tuner.tick()
         losses.append(float(metrics["loss"]))
         if i % 25 == 0:
             rate = (i - start + 1) * args.batch / (time.time() - t0)

@@ -1,0 +1,33 @@
+"""repro.api — the single public runtime API (DESIGN.md §8).
+
+One protocol (`Backend`), one driver (`Session`), one event stream
+(`ResizeEvent` / `ChurnEvent` / `DeadWindow`), typed per-tick
+(`Telemetry`) and per-run (`RunResult`) results, and a string-keyed
+one-liner (`tune`). Every substrate — analytic sim, threaded executor,
+fleet sim, live fleet — sits behind a thin adapter; nothing above this
+package speaks a substrate dialect directly.
+"""
+from repro.api.backend import Backend, BackendBase, UnsupportedEventError
+from repro.api.backends import (ControllerBackend, DialectBackend,
+                                ExecutorBackend, FleetSimBackend,
+                                LiveFleetBackend, SimBackend, as_backend)
+from repro.api.constants import OOM_RESTART_TICKS, RELAUNCH_TICKS
+from repro.api.events import (ChurnEvent, DeadWindow, Event, ResizeEvent,
+                              churn_events, resize_events)
+from repro.api.registry import BACKENDS, make_backend, tune
+from repro.api.session import FrozenPolicy, Session
+from repro.api.telemetry import RunResult, Telemetry
+from repro.api.validation import (AllocationError, validate_allocation,
+                                  validate_fleet_allocation)
+
+__all__ = [
+    "Backend", "BackendBase", "UnsupportedEventError",
+    "ControllerBackend", "DialectBackend", "ExecutorBackend",
+    "FleetSimBackend", "LiveFleetBackend", "SimBackend", "as_backend",
+    "OOM_RESTART_TICKS", "RELAUNCH_TICKS",
+    "ChurnEvent", "DeadWindow", "Event", "ResizeEvent",
+    "churn_events", "resize_events",
+    "BACKENDS", "make_backend", "tune",
+    "FrozenPolicy", "Session", "RunResult", "Telemetry",
+    "AllocationError", "validate_allocation", "validate_fleet_allocation",
+]

@@ -1,0 +1,442 @@
+"""Thin adapters putting every substrate behind the Backend protocol.
+
+One adapter per substrate — none of them reimplements dynamics; they
+translate the protocol onto the substrate's existing surface and lift
+metric dicts into `Telemetry`:
+
+  SimBackend         PipelineSim (analytic single machine)
+  ExecutorBackend    ThreadedPipeline (real threads, measured throughput,
+                     budget-enforced OOM — the single-machine LiveFleet)
+  FleetSimBackend    FleetSim (N analytic trainers + pool + churn)
+  LiveFleetBackend   LiveFleet (N real ThreadedPipelines)
+  ControllerBackend  the legacy paper-protocol path: the InTune
+                     controller's own env simulator is authoritative and
+                     the Session just clocks `tuner.tick()` (used with
+                     optimizer=None; this is what keeps the published
+                     fig5/fig7 linear-chain numbers byte-identical)
+
+`as_backend` wraps an already-constructed substrate (or any object
+speaking the legacy machine/apply/resize dialect) for the deprecation
+shims in benchmarks.common.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.api.backend import BackendBase
+from repro.api.events import ChurnEvent
+from repro.api.telemetry import Telemetry
+from repro.api.validation import validate_allocation, validate_fleet_allocation
+from repro.data.executor import ThreadedPipeline
+from repro.data.fleet import (ClusterSpec, FleetBackend, FleetEvent,
+                              FleetSim, TrainerSpec)
+from repro.data.simulator import (MachineSpec, OOM_RESTART_TICKS,
+                                  PipelineSim, graph_memory_mb)
+
+
+class SimBackend(BackendBase):
+    """The analytic `PipelineSim` behind the protocol."""
+
+    def __init__(self, spec=None, machine: Optional[MachineSpec] = None,
+                 *, model_latency: float = 0.0, seed: int = 0,
+                 obs_noise: float = 0.02, sim: Optional[PipelineSim] = None):
+        super().__init__()
+        self.sim = sim if sim is not None else PipelineSim(
+            spec, machine, model_latency, seed=seed, obs_noise=obs_noise)
+        self.spec = self.sim.spec
+
+    def apply(self, alloc) -> Telemetry:
+        self._check_open()
+        validate_allocation(self.spec, alloc)
+        return Telemetry.from_metrics(self.sim.apply(alloc))
+
+    def _resize(self, n_cpus: int):
+        self.sim.resize(n_cpus)
+
+    def _advance_clock(self):
+        self.sim.time += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"time": self.sim.time, "oom_count": self.sim.oom_count,
+                "restart_left": self.sim.restart_left,
+                "n_cpus": self.sim.machine.n_cpus}
+
+    @property
+    def machine(self) -> MachineSpec:
+        return self.sim.machine
+
+    @property
+    def capacity(self) -> int:
+        return self.sim.machine.n_cpus
+
+    @property
+    def oom_count(self) -> int:
+        return self.sim.oom_count
+
+
+class ExecutorBackend(BackendBase):
+    """A REAL ThreadedPipeline behind the protocol: the single-machine
+    live backend.
+
+    Two modes:
+      - owned (default): builds a `_TrainerRig` — sleep-based stage fns
+        realizing the spec's true costs plus a consumer thread modeling
+        `1/model_latency` demand — and enforces the simulator's contract:
+        measured window throughput, budget-based OOM (over-budget kill +
+        OOM_RESTART_TICKS dead window + relaunch), over-subscription
+        charged in accounting.
+      - `ExecutorBackend.wrap(pipe)`: adopts a user-constructed pipeline
+        (real stage fns, the training loop consuming via get_batch).
+        Throughput is still the measured consumed-counter delta; OOM is
+        REPORTED (the oom flag) but not enforced — the backend cannot
+        relaunch user code it did not build.
+    """
+
+    def __init__(self, spec=None, machine: Optional[MachineSpec] = None,
+                 *, model_latency: float = 0.0, window_s: float = 0.05,
+                 queue_depth: int = 8, seed: int = 0,
+                 pipe: Optional[ThreadedPipeline] = None):
+        # seed is accepted for factory-signature parity with SimBackend
+        # (thread scheduling is the noise source here, not an RNG)
+        super().__init__()
+        self.window_s = float(window_s)
+        self.queue_depth = queue_depth
+        self.time = 0
+        self._oom_count = 0
+        self.restart_left = 0
+        self.crash_lost = 0
+        self.all_joined = True
+        self._over_budget = False
+        if pipe is not None:
+            self.spec = pipe.spec
+            self._machine = pipe.machine
+            self._trainer = None
+            self._rig = _ExternalRig(pipe)
+            self._enforce_oom = False
+        else:
+            self.spec = spec
+            self._machine = machine
+            self._trainer = TrainerSpec(spec.name, spec, machine,
+                                        model_latency)
+            self._rig = self._launch()
+            self._enforce_oom = True
+
+    @classmethod
+    def wrap(cls, pipe: ThreadedPipeline, *, window_s: float = 0.05):
+        """Adopt an existing user pipeline (external consumer)."""
+        return cls(pipe=pipe, window_s=window_s)
+
+    def _launch(self):
+        from repro.data.live_fleet import _TrainerRig
+        return _TrainerRig(self._trainer, self._machine.n_cpus,
+                           self.queue_depth)
+
+    # ------------------------------------------------------------- tick ---
+    def apply(self, alloc) -> Telemetry:
+        self._check_open()
+        validate_allocation(self.spec, alloc)
+        mem = graph_memory_mb(self.spec, alloc.workers, alloc.prefetch_mb)
+        used = int(np.sum(alloc.workers))
+        cap = self._machine.n_cpus
+        self.time += 1
+        if self.restart_left > 0:
+            self.restart_left -= 1
+            if self.restart_left == 0 and self._rig is None:
+                # dead window over: relaunch a fresh pipeline process
+                self._rig = self._launch()
+            return Telemetry(0.0, mem, used, False, True)
+        if self._enforce_oom and mem > self._machine.mem_mb:
+            # budget-enforced OOM, the simulator's judge verbatim: the
+            # process is killed (hard stop, no drain) and pays the same
+            # restart window before relaunch
+            self._oom_count += 1
+            self.restart_left = OOM_RESTART_TICKS
+            if self._rig is not None:
+                acct = self._rig.teardown(drain=False)
+                self.crash_lost += max(
+                    0, acct["delivered"] - acct["consumed"])
+                self.all_joined = self.all_joined and acct["joined"]
+                self._rig = None
+            return Telemetry(0.0, mem, used, True, True)
+        if self._rig.pipe.machine.n_cpus != cap:
+            self._rig.set_eff_cpus(cap)
+        self._rig.set_allocation(alloc)
+        before = self._rig.counters()
+        time.sleep(self.window_s)
+        tput = ThreadedPipeline.window_rate(before, self._rig.counters())
+        if self._enforce_oom and used > cap:
+            # owned rigs only: sleeps don't contend like real CPUs, so
+            # charge the simulator's proportional over-subscription
+            # slowdown in accounting. A wrapped user pipeline runs real
+            # stage fns whose contention the measured rate already shows.
+            tput *= cap / used
+        # wrap mode reports (but cannot enforce) OOM: count each ENTRY
+        # into the over-budget state so oom_count stays meaningful even
+        # though the user-owned process is never killed
+        oom_flag = (not self._enforce_oom) and mem > self._machine.mem_mb
+        if oom_flag and not self._over_budget:
+            self._oom_count += 1
+        self._over_budget = oom_flag
+        # carry the measured executor stats (stage_latency, mem_frac, ...)
+        # so learning observers take their live branch — the next-state
+        # comes from the same measurement source the agent acted on
+        extras = {k: v for k, v in self._rig.pipe.stats().items()
+                  if k != "throughput"}
+        return Telemetry(tput, mem, used, oom_flag, False, extras)
+
+    def stats(self) -> Optional[dict]:
+        """The live stats() observation for propose(..., stats=...);
+        None while the process is down (OOM restart window)."""
+        return self._rig.pipe.stats() if self._rig is not None else None
+
+    # ---------------------------------------------------------- protocol --
+    def _resize(self, n_cpus: int):
+        self._machine = dataclasses.replace(self._machine, n_cpus=n_cpus)
+        if self._rig is not None:
+            self._rig.set_eff_cpus(n_cpus)
+
+    def _advance_clock(self):
+        self.time += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"time": self.time, "oom_count": self._oom_count,
+                "restart_left": self.restart_left,
+                "n_cpus": self._machine.n_cpus}
+
+    def _do_shutdown(self) -> Dict[str, Any]:
+        dropped = 0
+        if self._rig is not None:
+            acct = self._rig.teardown(drain=True)
+            dropped = acct["dropped"]
+            self.all_joined = self.all_joined and acct["joined"]
+            self._rig = None
+        return {"dropped_batches": dropped, "crash_lost": self.crash_lost,
+                "all_joined": self.all_joined, "oom_count": self._oom_count}
+
+    @property
+    def machine(self) -> MachineSpec:
+        return self._machine
+
+    @property
+    def capacity(self) -> int:
+        return self._machine.n_cpus
+
+    @property
+    def oom_count(self) -> int:
+        return self._oom_count
+
+
+class _ExternalRig:
+    """Rig-shaped shim over a user-owned ThreadedPipeline (no consumer
+    thread — the user's training loop is the consumer)."""
+
+    def __init__(self, pipe: ThreadedPipeline):
+        self.pipe = pipe
+
+    def set_allocation(self, alloc):
+        self.pipe.set_allocation(alloc.workers, alloc.prefetch_mb)
+
+    def set_eff_cpus(self, n: int):
+        self.pipe.machine = dataclasses.replace(self.pipe.machine,
+                                                n_cpus=int(n))
+
+    def counters(self) -> dict:
+        return self.pipe.counters()
+
+    def teardown(self, drain: bool = True, timeout: float = 5.0) -> dict:
+        return self.pipe.shutdown(drain=drain, timeout=timeout)
+
+
+class _FleetAdapter(BackendBase):
+    """Shared fleet adaptation: both fleet substrates subclass
+    `repro.data.fleet.FleetBackend`, so the protocol mapping is
+    identical — only construction and teardown differ."""
+
+    inner: FleetBackend
+
+    def __init__(self, inner: FleetBackend):
+        super().__init__()
+        self.inner = inner
+        self.spec = inner.cluster
+
+    def apply(self, falloc) -> Telemetry:
+        self._check_open()
+        validate_fleet_allocation(self.spec, falloc)
+        m = dict(self.inner.apply(falloc))
+        per = m.get("per_trainer")
+        if per is not None:
+            m["per_trainer"] = {n: Telemetry.from_metrics(d)
+                                for n, d in per.items()}
+        return Telemetry.from_metrics(m)
+
+    def _resize(self, n_cpus: int):
+        self.inner.resize(n_cpus)         # fleet dialect: pool re-cap
+
+    def _churn(self, event: ChurnEvent):
+        self.inner.inject_event(FleetEvent(
+            tick=event.tick, kind=event.kind, trainer=event.trainer,
+            n_cpus=event.n_cpus))
+
+    def _advance_clock(self):
+        self.inner.time += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        state = self.inner.machine
+        return {"time": self.inner.time, "pool": self.inner.pool,
+                "active": state.active, "base_cpus": state.base_cpus,
+                "oom_count": self.inner.oom_count}
+
+    @property
+    def machine(self):
+        return self.inner.machine         # FleetState
+
+    @property
+    def capacity(self) -> int:
+        return self.inner.machine.n_cpus
+
+    @property
+    def oom_count(self) -> int:
+        return self.inner.oom_count
+
+
+class FleetSimBackend(_FleetAdapter):
+    """The analytic FleetSim behind the protocol."""
+
+    def __init__(self, cluster: Optional[ClusterSpec] = None, *,
+                 seed: int = 0, obs_noise: float = 0.02,
+                 sim: Optional[FleetSim] = None):
+        super().__init__(sim if sim is not None
+                         else FleetSim(cluster, seed=seed,
+                                       obs_noise=obs_noise))
+
+    def snapshot(self) -> Dict[str, Any]:
+        snap = super().snapshot()
+        snap["trainers"] = {
+            n: {"time": s.time, "oom_count": s.oom_count,
+                "restart_left": s.restart_left,
+                "n_cpus": s.machine.n_cpus}
+            for n, s in sorted(self.inner.sims.items())}
+        return snap
+
+
+class LiveFleetBackend(_FleetAdapter):
+    """The live-executor LiveFleet behind the protocol; `shutdown()`
+    returns its drop/leak accounting."""
+
+    def __init__(self, cluster: Optional[ClusterSpec] = None, *,
+                 seed: int = 0, window_s: float = 0.1,
+                 queue_depth: int = 8, fleet=None):
+        if fleet is None:
+            from repro.data.live_fleet import LiveFleet
+            fleet = LiveFleet(cluster, seed=seed, window_s=window_s,
+                              queue_depth=queue_depth)
+        super().__init__(fleet)
+
+    def _do_shutdown(self) -> Dict[str, Any]:
+        return self.inner.close()
+
+
+class ControllerBackend(BackendBase):
+    """The legacy paper-protocol path behind the protocol: the InTune
+    controller's internal env simulator is authoritative and each apply
+    is one self-driving `tuner.tick()`. Use with `Session(backend)` and
+    no optimizer — the published fig5/fig7 linear-chain benchmarks run
+    through exactly this, keeping their golden JSONs byte-identical."""
+
+    def __init__(self, tuner):
+        super().__init__()
+        self.tuner = tuner
+        self.spec = tuner.spec
+
+    def apply(self, alloc) -> Telemetry:
+        self._check_open()
+        if alloc is not None:
+            raise TypeError(
+                "ControllerBackend is self-driving: run it with "
+                "Session(backend) and no optimizer (the controller "
+                "ignores external proposals)")
+        return Telemetry.from_metrics(self.tuner.tick())
+
+    def _resize(self, n_cpus: int):
+        self.tuner.resize(n_cpus)
+
+    def _advance_clock(self):
+        self.tuner.env.sim.time += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        sim = self.tuner.env.sim
+        return {"time": sim.time, "oom_count": sim.oom_count,
+                "restart_left": sim.restart_left,
+                "n_cpus": sim.machine.n_cpus}
+
+    @property
+    def machine(self) -> MachineSpec:
+        return self.tuner.env.sim.machine
+
+    @property
+    def capacity(self) -> int:
+        return self.tuner.env.sim.machine.n_cpus
+
+    @property
+    def oom_count(self) -> int:
+        return self.tuner.env.sim.oom_count
+
+
+def as_backend(obj) -> BackendBase:
+    """Wrap an already-constructed substrate. Known substrates get their
+    typed adapter; anything else speaking the legacy machine/apply/resize
+    dialect gets `DialectBackend` (no validation — the shim of last
+    resort for custom sim_factory objects)."""
+    if isinstance(obj, BackendBase):
+        return obj
+    if isinstance(obj, PipelineSim):
+        return SimBackend(sim=obj)
+    if isinstance(obj, FleetSim):
+        return FleetSimBackend(sim=obj)
+    from repro.data.live_fleet import LiveFleet
+    if isinstance(obj, LiveFleet):
+        return LiveFleetBackend(fleet=obj)
+    if isinstance(obj, ThreadedPipeline):
+        return ExecutorBackend.wrap(obj)
+    return DialectBackend(obj)
+
+
+class DialectBackend(BackendBase):
+    """Adapter of last resort over the legacy driver dialect
+    (`machine` / `apply(alloc) -> dict` / `resize(n)` / `time` /
+    `oom_count`)."""
+
+    def __init__(self, inner):
+        super().__init__()
+        self.inner = inner
+        self.spec = getattr(inner, "spec", getattr(inner, "cluster", None))
+
+    def apply(self, alloc) -> Telemetry:
+        self._check_open()
+        return Telemetry.from_metrics(self.inner.apply(alloc))
+
+    def _resize(self, n_cpus: int):
+        self.inner.resize(n_cpus)
+
+    def _advance_clock(self):
+        self.inner.time += 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"time": getattr(self.inner, "time", None),
+                "oom_count": getattr(self.inner, "oom_count", 0)}
+
+    @property
+    def machine(self):
+        return self.inner.machine
+
+    @property
+    def capacity(self) -> int:
+        return self.inner.machine.n_cpus
+
+    @property
+    def oom_count(self) -> int:
+        return getattr(self.inner, "oom_count", 0)

@@ -1,0 +1,18 @@
+"""Runtime constants shared by every driver.
+
+RELAUNCH_TICKS used to live in `benchmarks/common.py` while the fleet
+benchmark and the live scaling math re-imported it from there — a
+benchmark-private number that every plane actually depends on. It lives
+here now; `benchmarks.common.RELAUNCH_TICKS` is a re-export.
+
+OOM_RESTART_TICKS stays defined next to the OOM judge itself
+(`repro.data.simulator`) so the data plane cannot drift from it; it is
+re-exported here so API users find both windows in one place.
+"""
+from repro.data.simulator import OOM_RESTART_TICKS
+
+# checkpoint + relaunch dead time a static (*-Adaptive) policy pays to
+# adapt: the pipeline process is down for this many ticks
+RELAUNCH_TICKS = 20
+
+__all__ = ["RELAUNCH_TICKS", "OOM_RESTART_TICKS"]

@@ -1,9 +1,11 @@
 """InTune controller: the drop-in wrapper (paper §4.4, Listing 1).
 
-    pipe = executor.ThreadedPipeline(spec, fn_by_stage)   # or a simulator
-    tuner = InTune(spec, machine)
-    tuner.attach(pipe)          # live mode: tunes a real executor
-    # or, simulator-driven (benchmarks / offline tuning):
+    # the unified driver (repro.api): any backend, one loop
+    backend = ExecutorBackend.wrap(pipe)      # or SimBackend(spec, machine)
+    Session(backend, InTune(spec, machine)).run(ticks)
+    # legacy live mode (tunes a real executor in-process):
+    tuner.attach(pipe); tuner.live_tick()
+    # legacy self-driving paper protocol (ControllerBackend wraps this):
     for _ in range(ticks):
         tuner.tick()
 
@@ -18,11 +20,16 @@ from typing import Optional
 
 import numpy as np
 
+from typing import TYPE_CHECKING
+
 from repro.core import actions as act_lib
 from repro.core.agent import DQNAgent, DQNConfig
 from repro.core.env import PipelineEnv, even_allocation
 from repro.data.pipeline import PipelineSpec
 from repro.data.simulator import Allocation, MachineSpec
+
+if TYPE_CHECKING:   # annotation-only: keep the core plane below repro.api
+    from repro.api.telemetry import Telemetry
 
 
 class InTune:
@@ -154,14 +161,17 @@ class InTune:
         self._pending = (self.obs, choices)
         return self.env.alloc
 
-    def observe(self, metrics: dict) -> None:
-        """Learn from the metrics of the proposal the driver just applied.
+    def observe(self, metrics: Telemetry) -> None:
+        """Learn from the telemetry of the proposal the driver just
+        applied.
 
-        `metrics` is either a simulator tick dict (mem_mb/throughput) or a
-        live executor stats() dict (stage_latency/mem_frac/...). Live
-        drivers pass stats to BOTH propose and observe, so the transition's
-        next-state comes from the same measurement source as the state the
-        agent acted on — never from the internal analytic env.
+        `metrics` is the backend's Telemetry (or, legacy, a simulator tick
+        dict with mem_mb/throughput, or a live executor stats() dict with
+        stage_latency/mem_frac/... — Telemetry is mapping-compatible so
+        all three read identically). Live drivers pass stats to BOTH
+        propose and observe, so the transition's next-state comes from the
+        same measurement source as the state the agent acted on — never
+        from the internal analytic env.
         """
         if getattr(self, "_pending", None) is None:
             return

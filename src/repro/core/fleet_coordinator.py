@@ -2,11 +2,12 @@
 
 One InTune DQN agent per trainer (reusing the per-length pretrained
 weights), with a coordinator arbitrating the shared elastic CPU pool
-above them. It speaks the Optimizer protocol against a FleetSim:
+above them. It speaks the Optimizer protocol against any fleet backend
+(`repro.api.Session` drives it over FleetSimBackend or LiveFleetBackend):
 
     falloc = coord.propose(cluster, fleet_state)   # FleetAllocation
-    metrics = fleet_sim.apply(falloc)
-    coord.observe(metrics)                          # routes per-trainer
+    telemetry = backend.apply(falloc)
+    coord.observe(telemetry)                        # routes per-trainer
 
 Coordinator responsibilities (the cluster plane; each InTune keeps owning
 its machine's per-stage placement):
@@ -32,7 +33,7 @@ its machine's per-stage placement):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import TYPE_CHECKING, Dict, Optional
 
 import numpy as np
 
@@ -40,6 +41,9 @@ from repro.core import baselines as B
 from repro.core.controller import InTune
 from repro.data.fleet import ClusterSpec, FleetAllocation, FleetState
 from repro.data.simulator import Allocation, graph_memory_mb
+
+if TYPE_CHECKING:   # annotation-only: keep the core plane below repro.api
+    from repro.api.telemetry import Telemetry
 
 
 def clamp_to_memory(pipeline, alloc: Allocation, mem_mb: float,
@@ -210,7 +214,7 @@ class FleetCoordinator:
         self._last_active = state.active
         return FleetAllocation(allocs, grants)
 
-    def observe(self, metrics: dict) -> None:
+    def observe(self, metrics: Telemetry) -> None:
         per = metrics.get("per_trainer")
         if per is None:
             return              # fleet-wide dead window: nothing ran

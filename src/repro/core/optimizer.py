@@ -9,21 +9,27 @@ Now everything that places CPUs over a StageGraph speaks one protocol:
         The allocation the policy wants next. `stats` carries live
         measurements (the executor's stats() dict or a simulator
         observation); one-shot policies ignore it.
-    observe(metrics) -> None
-        Feedback for the proposal just applied (the simulator/executor
-        metrics dict). Learning policies train on it; static ones no-op.
+    observe(telemetry) -> None
+        Feedback for the proposal just applied: the backend's typed
+        `repro.api.Telemetry` (mapping-compatible, so policies written
+        against the legacy metrics-dict dialect keep working). Learning
+        policies train on it; static ones no-op.
 
-Drivers (benchmarks/common.run_optimizer, examples, live controllers)
-loop propose -> apply -> observe without knowing which policy runs.
-Static baselines re-propose on a machine resize (the paper's *-Adaptive
+The one driver is `repro.api.Session`: it loops propose -> apply ->
+observe against any Backend without knowing which policy runs. Static
+baselines re-propose on a machine resize (the paper's *-Adaptive
 relaunch behavior is the driver charging a dead window for that).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+from typing import (TYPE_CHECKING, Callable, Dict, Optional, Protocol,
+                    runtime_checkable)
 
 from repro.data.pipeline import StageGraph
 from repro.data.simulator import Allocation, MachineSpec
+
+if TYPE_CHECKING:   # annotation-only: keep the core plane below repro.api
+    from repro.api.telemetry import Telemetry
 
 
 @runtime_checkable
@@ -34,7 +40,7 @@ class Optimizer(Protocol):
                 stats: Optional[dict] = None) -> Allocation:
         ...
 
-    def observe(self, metrics: dict) -> None:
+    def observe(self, metrics: Telemetry) -> None:
         ...
 
 
@@ -70,7 +76,7 @@ class StaticOptimizer:
                 self._alloc = self._fn(spec, machine)
         return self._alloc
 
-    def observe(self, metrics: dict) -> None:
+    def observe(self, metrics: Telemetry) -> None:
         pass
 
 
@@ -91,8 +97,8 @@ def make_optimizer(name: str, spec: StageGraph, machine: MachineSpec,
 # ---------------------------------------------------------------------------
 # Cluster granularity: the same protocol, one level up. A fleet policy's
 # propose(cluster, fleet_state) answers with a FleetAllocation and its
-# observe gets the FleetSim's aggregate metrics dict — so
-# benchmarks.common.run_optimizer drives a whole fleet with the identical
+# observe gets the fleet backend's aggregate Telemetry — so
+# repro.api.Session drives a whole fleet with the identical
 # propose -> apply -> observe loop.
 # ---------------------------------------------------------------------------
 
@@ -117,7 +123,7 @@ class FleetStaticOptimizer:
             self._seed += 1     # each relaunch is a fresh one-shot run
         return self._falloc
 
-    def observe(self, metrics: dict) -> None:
+    def observe(self, metrics: Telemetry) -> None:
         pass
 
 

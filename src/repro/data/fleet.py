@@ -187,6 +187,24 @@ class FleetBackend:
             elif ev.kind == "pool":
                 self.pool = int(ev.n_cpus)
 
+    def inject_event(self, ev: FleetEvent):
+        """Dynamically add a churn event to the pending schedule (the
+        `repro.api` ChurnEvent injection path). Events already applied
+        stay applied; the new event is merged into the not-yet-applied
+        tail in tick order (stable, so same-tick events keep their
+        injection order). An event whose tick is already past fires on
+        the next state read."""
+        if ev.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {ev.kind!r}; "
+                             f"known: {EVENT_KINDS}")
+        if ev.kind != "pool" \
+                and not any(t.name == ev.trainer for t in self.cluster.trainers):
+            raise ValueError(f"event {ev.kind!r}@{ev.tick} targets unknown "
+                             f"trainer {ev.trainer!r}")
+        pending = self._events[self._next_event:] + [ev]
+        pending.sort(key=lambda e: e.tick)
+        self._events = self._events[:self._next_event] + pending
+
     @property
     def machine(self) -> FleetState:
         self._advance_events()

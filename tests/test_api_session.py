@@ -1,0 +1,309 @@
+"""repro.api surface: Session semantics, the tune() one-liner, typed
+results, allocation validation, and the one-PR deprecation shims.
+
+The shim tests pin BOTH halves of the deprecation contract: the
+DeprecationWarning fires, and the shim's output matches the direct
+Session path float-for-float (the shims must reproduce the legacy
+loops exactly — the fig5 golden suite enforces the same at the
+benchmark level)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (AllocationError, ControllerBackend, DeadWindow,
+                       FleetSimBackend, RELAUNCH_TICKS, ResizeEvent,
+                       RunResult, Session, SimBackend, Telemetry, tune,
+                       make_backend, resize_events, validate_allocation,
+                       validate_fleet_allocation)
+from repro.core.optimizer import make_fleet_optimizer, make_optimizer
+from repro.data.fleet import (ClusterSpec, FleetAllocation, FleetEvent,
+                              TrainerSpec, demo_cluster)
+from repro.data.pipeline import criteo_pipeline
+from repro.data.simulator import Allocation, MachineSpec, resize_schedule
+
+SPEC = criteo_pipeline()
+MACHINE = MachineSpec(n_cpus=64, mem_mb=65536.0)
+
+
+# ------------------------------------------------------------ session -----
+def test_session_resize_event_changes_capacity_mid_run():
+    opt = make_optimizer("heuristic", SPEC, MACHINE)
+    res = Session(SimBackend(SPEC, MACHINE, seed=0), opt).run(
+        10, events=[ResizeEvent(5, 32)])
+    assert res.used_cpus[4] > res.used_cpus[5]          # re-proposed at 32
+    assert res.ticks == 10
+
+
+def test_session_dead_window_zeroes_ticks():
+    opt = make_optimizer("oracle", SPEC, MACHINE)
+    res = Session(SimBackend(SPEC, MACHINE, seed=0), opt).run(
+        8, events=[DeadWindow(2, 3)])
+    assert res.throughput[0] > 0.0 and res.throughput[5] > 0.0
+    assert res.throughput[2:5] == [0.0, 0.0, 0.0]
+    assert res.used_cpus[2:5] == [0, 0, 0]
+
+
+def test_session_relaunch_dead_charged_on_proposal_change():
+    opt = make_optimizer("heuristic", SPEC, MACHINE)
+    res = Session(SimBackend(SPEC, MACHINE, seed=0), opt).run(
+        10, events=[ResizeEvent(4, 32)], relaunch_dead=3)
+    assert res.throughput[3] > 0.0
+    assert res.throughput[4:7] == [0.0, 0.0, 0.0]       # re-proposal paid
+    assert res.throughput[7] > 0.0
+
+
+def test_session_collect_sees_telemetry_every_tick():
+    seen = []
+    opt = make_optimizer("oracle", SPEC, MACHINE)
+    Session(SimBackend(SPEC, MACHINE, seed=0), opt).run(
+        4, collect=lambda t, tel: seen.append((t, tel)))
+    assert [t for t, _ in seen] == [0, 1, 2, 3]
+    assert all(isinstance(tel, Telemetry) for _, tel in seen)
+
+
+def test_run_result_is_mapping_compatible():
+    opt = make_optimizer("oracle", SPEC, MACHINE)
+    res = Session(SimBackend(SPEC, MACHINE, seed=0), opt).run(3)
+    assert isinstance(res, RunResult)
+    assert res["throughput"] == res.throughput
+    assert res["oom_count"] == res.oom_count == 0
+    assert res.get("missing") is None and "mem_mb" in res
+    assert set(res.to_dict()) >= {"throughput", "used_cpus", "mem_mb",
+                                  "oom_count"}
+
+
+# --------------------------------------------------------------- tune -----
+def test_tune_one_liner_sim():
+    res = tune(SPEC, MACHINE, optimizer="oracle", backend="sim", ticks=5)
+    assert res.ticks == 5 and min(res.throughput) > 0
+    assert res.extras["optimizer"].name == "oracle"
+
+
+def test_tune_one_liner_fleet():
+    cluster = demo_cluster(40)
+    res = tune(cluster, optimizer="fleet_even", backend="sim", ticks=8,
+               relaunch_dead=2)
+    assert res.ticks == 8
+    assert res.extras["optimizer"].name == "fleet_even"
+
+
+def test_make_backend_rejects_unknown_names():
+    with pytest.raises(KeyError, match="unknown single backend"):
+        make_backend("warp_drive", SPEC, MACHINE)
+    with pytest.raises(KeyError, match="unknown fleet backend"):
+        make_backend("warp_drive", demo_cluster(10))
+    with pytest.raises(TypeError, match="needs a MachineSpec"):
+        make_backend("sim", SPEC)           # machine=None: named error
+    with pytest.raises(TypeError, match="silently ignored"):
+        make_backend("sim", demo_cluster(10), MACHINE)
+
+
+def test_wrapped_executor_counts_oom_entries_without_killing():
+    from repro.api import ExecutorBackend
+    from repro.data.executor import ThreadedPipeline
+    from repro.data.live_fleet import (live_linear_pipeline,
+                                       synthetic_stage_fns)
+    spec = live_linear_pipeline()
+    pipe = ThreadedPipeline(spec, fns=synthetic_stage_fns(spec),
+                            queue_depth=4,
+                            machine=MachineSpec(n_cpus=4, mem_mb=2500.0))
+    backend = ExecutorBackend.wrap(pipe, window_s=0.02)
+    try:
+        ok = Allocation(np.ones(5, dtype=int), prefetch_mb=16.0)
+        over = Allocation(np.full(5, 3, dtype=int), prefetch_mb=16.0)
+        assert backend.apply(ok).oom is False
+        # two consecutive over-budget ticks = ONE observed OOM entry;
+        # wrap mode reports, it never kills the user's process
+        assert backend.apply(over).oom is True
+        assert backend.apply(over).oom is True
+        assert backend.oom_count == 1
+        assert backend.apply(ok).oom is False
+        assert backend.apply(over).oom is True      # re-entry counts again
+        assert backend.oom_count == 2
+    finally:
+        acct = backend.shutdown()
+    assert acct["all_joined"] is True
+
+
+# --------------------------------------------------------- validation -----
+def test_validate_allocation_rejects_bad_shapes():
+    with pytest.raises(AllocationError, match="negative worker count"):
+        validate_allocation(SPEC, Allocation(np.array([1, -2, 1, 1, 1])))
+    with pytest.raises(AllocationError, match="5 stages"):
+        validate_allocation(SPEC, Allocation(np.ones(3, dtype=int)))
+    with pytest.raises(AllocationError, match="prefetch_mb"):
+        validate_allocation(
+            SPEC, Allocation(np.ones(5, dtype=int), prefetch_mb=-1.0))
+    with pytest.raises(AllocationError, match="integers"):
+        validate_allocation(SPEC, Allocation(np.ones(5)))
+    with pytest.raises(AllocationError, match="1-D"):
+        validate_allocation(SPEC, Allocation(np.ones((5, 1), dtype=int)))
+    # a valid allocation passes silently
+    validate_allocation(SPEC, Allocation(np.ones(5, dtype=int), 64.0))
+
+
+def test_validate_fleet_allocation():
+    cluster = demo_cluster(40)
+    ok = {t.name: Allocation(np.ones(t.pipeline.n_stages, dtype=int), 8.0)
+          for t in cluster.trainers}
+    validate_fleet_allocation(cluster, FleetAllocation(dict(ok), {"big": 1}))
+    with pytest.raises(AllocationError, match="unknown trainer"):
+        validate_fleet_allocation(cluster, FleetAllocation(
+            {"nope": Allocation(np.ones(5, dtype=int))}))
+    with pytest.raises(AllocationError, match="trainer 'big'"):
+        bad = dict(ok)
+        bad["big"] = Allocation(np.array([1, 1, -1, 1, 1]))
+        validate_fleet_allocation(cluster, FleetAllocation(bad))
+    with pytest.raises(AllocationError, match="negative pool grant"):
+        validate_fleet_allocation(
+            cluster, FleetAllocation(dict(ok), {"big": -2}))
+
+
+def test_sim_backend_rejects_bad_allocation_before_apply():
+    backend = SimBackend(SPEC, MACHINE, seed=0)
+    with pytest.raises(AllocationError):
+        backend.apply(Allocation(np.ones(7, dtype=int)))
+    assert backend.snapshot()["time"] == 0      # nothing was applied
+
+
+# ----------------------------------------------- deprecation shims --------
+def _assert_same_series(a, b):
+    for key in ("throughput", "used_cpus", "mem_mb"):
+        assert list(a[key]) == list(b[key]), key
+    assert a["oom_count"] == b["oom_count"]
+
+
+def test_run_optimizer_shim_warns_and_matches_session():
+    from benchmarks import common
+    resizes = [(3, 32), (6, 96)]
+    with pytest.warns(DeprecationWarning, match="run_optimizer"):
+        legacy = common.run_optimizer(
+            make_optimizer("heuristic", SPEC, MACHINE), SPEC, MACHINE, 10,
+            resizes=resizes, relaunch_dead=2)
+    direct = Session(SimBackend(SPEC, MACHINE, seed=0),
+                     make_optimizer("heuristic", SPEC, MACHINE)).run(
+        10, events=resize_events(resizes), relaunch_dead=2)
+    _assert_same_series(legacy, direct)
+
+
+def test_run_static_shim_warns_and_matches_legacy_protocol():
+    """The shim must reproduce the pre-API run_static loop exactly,
+    including the quirk that a readapt policy pays the relaunch window
+    at EVERY scheduled resize tick (even a same-cap re-cap)."""
+    from benchmarks import common
+    from repro.core import baselines as B
+    resizes = [(0, 64), (20, 32)]
+    alloc = B.heuristic_even(SPEC, MACHINE)
+    with pytest.warns(DeprecationWarning, match="run_static"):
+        res = common.run_static(SPEC, MACHINE, alloc, 50, resizes=resizes,
+                                readapt=lambda s, m, seed:
+                                B.heuristic_even(s, m))
+    # hand-rolled legacy loop (the pre-PR4 implementation, verbatim)
+    from repro.data.simulator import PipelineSim
+    sim = PipelineSim(SPEC, MACHINE, seed=0)
+    tput, mem, used = [], [], []
+    dead, cur, rmap = 0, alloc, dict(resizes)
+    for t in range(50):
+        if t in rmap:
+            sim.resize(rmap[t])
+            cur = B.heuristic_even(SPEC, sim.machine)
+            dead = RELAUNCH_TICKS
+        if dead > 0:
+            dead -= 1
+            m = {"throughput": 0.0, "mem_mb": 0.0, "used_cpus": 0}
+            sim.time += 1
+        else:
+            m = sim.apply(cur)
+        tput.append(m["throughput"])
+        used.append(min(m["used_cpus"], sim.machine.n_cpus))
+        mem.append(m["mem_mb"])
+    assert list(res["throughput"]) == tput
+    assert list(res["used_cpus"]) == used
+    assert list(res["mem_mb"]) == mem
+    assert res["caps"][0] == 64 and res["caps"][1] is None
+
+
+def test_shims_accept_legacy_dict_resizes():
+    """The legacy loops took resizes as [(tick, cap), ...] OR
+    {tick: cap}; the shims must keep accepting both."""
+    from benchmarks import common
+    opt_a = make_optimizer("heuristic", SPEC, MACHINE)
+    opt_b = make_optimizer("heuristic", SPEC, MACHINE)
+    with pytest.warns(DeprecationWarning):
+        as_list = common.run_optimizer(opt_a, SPEC, MACHINE, 8,
+                                       resizes=[(3, 32)])
+        as_dict = common.run_optimizer(opt_b, SPEC, MACHINE, 8,
+                                       resizes={3: 32})
+    assert list(as_list["throughput"]) == list(as_dict["throughput"])
+
+
+def test_telemetry_items_and_values():
+    tel = Telemetry(1.0, 2.0, 3, False, False, {"pool": 4})
+    assert dict(tel.items())["pool"] == 4
+    assert 1.0 in tel.values()
+    assert {k: v for k, v in tel.items()} == tel.to_dict()
+
+
+def test_run_intune_shims_warn_and_match_session():
+    from benchmarks import common
+    small = MachineSpec(n_cpus=16, mem_mb=16384.0)
+    with pytest.warns(DeprecationWarning, match="run_intune"):
+        legacy = common.run_intune(SPEC, small, 30, seed=0)
+    tuner = common.make_tuner(SPEC, small, seed=0)
+    direct = Session(ControllerBackend(tuner)).run(30)
+    assert list(legacy["throughput"]) == list(direct["throughput"])
+    assert legacy["oom_count"] == direct["oom_count"]
+    assert legacy["tuner"] is not None
+    with pytest.warns(DeprecationWarning, match="run_intune_protocol"):
+        legacy_p = common.run_intune_protocol(SPEC, small, 30, seed=0)
+    tuner2 = common.make_tuner(SPEC, small, seed=0)
+    direct_p = Session(SimBackend(SPEC, small, seed=0), tuner2).run(30)
+    assert list(legacy_p["throughput"]) == list(direct_p["throughput"])
+
+
+def test_run_fleet_optimizer_shim_warns_and_matches_session():
+    from benchmarks import common
+    cluster = demo_cluster(60)
+    with pytest.warns(DeprecationWarning, match="run_fleet_optimizer"):
+        legacy = common.run_fleet_optimizer(
+            make_fleet_optimizer("fleet_even", cluster, seed=0), cluster,
+            20, seed=0, relaunch_dead=RELAUNCH_TICKS)
+    direct = Session(FleetSimBackend(cluster, seed=0),
+                     make_fleet_optimizer("fleet_even", cluster,
+                                          seed=0)).run(
+        20, relaunch_dead=RELAUNCH_TICKS)
+    _assert_same_series(legacy, direct)
+    with pytest.raises(KeyError, match="unknown fleet backend"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            common.run_fleet_optimizer(
+                make_fleet_optimizer("fleet_even", cluster), cluster, 5,
+                backend="warp")
+
+
+# ------------------------------------------------ constants / events ------
+def test_relaunch_ticks_single_source_of_truth():
+    from benchmarks import common
+    from repro.api import constants
+    assert common.RELAUNCH_TICKS is constants.RELAUNCH_TICKS
+    assert RELAUNCH_TICKS == 20
+
+
+def test_resize_events_lifts_legacy_schedule():
+    evs = resize_events(resize_schedule(100))
+    assert evs[0] == ResizeEvent(0, 32)
+    assert [e.tick for e in evs] == [0, 20, 40, 60, 80]
+
+
+def test_fleet_backend_inject_event_merges_pending_tail():
+    from repro.data.fleet import FleetSim
+    cluster = demo_cluster(100)           # late joins at tick 33
+    sim = FleetSim(cluster, seed=0)
+    sim.inject_event(FleetEvent(tick=5, kind="leave", trainer="mid"))
+    state = sim.machine
+    assert "mid" in state.active          # tick 0: not yet
+    sim.time = 5
+    assert "mid" not in sim.machine.active
+    sim.time = 33
+    assert "late" in sim.machine.active   # original schedule intact

@@ -1,0 +1,223 @@
+"""Backend-protocol conformance: one parametrized suite, four backends.
+
+The `repro.api.Backend` contract is what makes the Session driver (and
+everything above it) substrate-agnostic, so the contract itself is
+tested, not assumed: every backend — analytic sim, threaded executor,
+fleet sim, live fleet — must present the same `apply -> Telemetry`
+surface, accept ResizeEvents, tear down idempotently, and (fleet
+backends) accept injected ChurnEvents. Seeded (analytic) backends must
+additionally replay byte-identically from the same seed.
+
+The live backends run REAL threads here: pipelines are tiny (ms-scale
+stage costs, ~0.04s measurement windows) so the whole suite stays
+tier-1 fast.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (AllocationError, Backend, ChurnEvent, ResizeEvent,
+                       Session, Telemetry, UnsupportedEventError,
+                       make_backend)
+from repro.data.fleet import ClusterSpec, TrainerSpec
+from repro.data.live_fleet import live_linear_pipeline
+from repro.data.simulator import Allocation, MachineSpec
+
+BACKENDS = ["sim", "executor", "fleet_sim", "fleet_live"]
+FLEET = {"fleet_sim", "fleet_live"}
+SEEDED = {"sim", "fleet_sim"}     # analytic: same seed => same bytes
+LIVE_KW = {"window_s": 0.04}
+
+
+def _spec():
+    return live_linear_pipeline()         # 5 stages, ms-scale costs
+
+
+def _machine():
+    return MachineSpec(n_cpus=8, mem_mb=4096.0)
+
+
+def _cluster():
+    spec = _spec()
+    trainers = (
+        TrainerSpec("a", spec, MachineSpec(n_cpus=4, mem_mb=4096.0),
+                    model_latency=0.01),
+        TrainerSpec("b", spec, MachineSpec(n_cpus=4, mem_mb=4096.0),
+                    model_latency=0.01),
+    )
+    return ClusterSpec("contract_fleet", trainers, shared_pool=4)
+
+
+def _make(name: str, seed: int = 0) -> Backend:
+    if name == "sim":
+        return make_backend("sim", _spec(), _machine(), seed=seed)
+    if name == "executor":
+        return make_backend("executor", _spec(), _machine(), seed=seed,
+                            **LIVE_KW)
+    if name == "fleet_sim":
+        return make_backend("sim", _cluster(), seed=seed)
+    return make_backend("live", _cluster(), seed=seed, **LIVE_KW)
+
+
+def _alloc(name: str, backend: Backend):
+    """A valid allocation for the backend's current state."""
+    if name in FLEET:
+        from repro.data.fleet import FleetAllocation
+        state = backend.machine
+        return FleetAllocation(
+            {n: Allocation(np.ones(5, dtype=int), prefetch_mb=16.0)
+             for n in state.active},
+            {n: 0 for n in state.active})
+    return Allocation(np.ones(5, dtype=int), prefetch_mb=16.0)
+
+
+def _bad_alloc(name: str, backend: Backend):
+    if name in FLEET:
+        from repro.data.fleet import FleetAllocation
+        state = backend.machine
+        allocs = {n: Allocation(np.ones(5, dtype=int), prefetch_mb=16.0)
+                  for n in state.active}
+        first = state.active[0]
+        allocs[first] = Allocation(np.array([1, -1, 1, 1, 1]))
+        return FleetAllocation(allocs, {n: 0 for n in state.active})
+    return Allocation(np.array([1, -1, 1, 1, 1]))
+
+
+@pytest.fixture(params=BACKENDS)
+def case(request):
+    backend = _make(request.param)
+    yield request.param, backend
+    backend.shutdown()
+
+
+# ----------------------------------------------------------- telemetry ----
+def test_apply_returns_full_telemetry(case):
+    name, backend = case
+    tel = backend.apply(_alloc(name, backend))
+    assert isinstance(tel, Telemetry)
+    assert isinstance(tel.throughput, float) and tel.throughput >= 0.0
+    assert isinstance(tel.mem_mb, float) and tel.mem_mb > 0.0
+    # fleet aggregates clamp each trainer's 5 workers to its 4 owned CPUs
+    assert isinstance(tel.used_cpus, int) and tel.used_cpus == (
+        8 if name in FLEET else 5)
+    assert tel.oom is False and tel.restarting is False
+    # mapping compatibility is part of the contract (legacy observers)
+    assert tel["throughput"] == tel.throughput
+    assert "mem_mb" in tel and tel.get("nope", 42) == 42
+    assert set(dict(tel)) >= {"throughput", "mem_mb", "used_cpus",
+                              "oom", "restarting"}
+    if name in FLEET:
+        assert set(tel["per_trainer"]) == set(backend.machine.active)
+
+
+def test_skip_tick_advances_clock_and_zeroes(case):
+    name, backend = case
+    t0 = backend.snapshot()["time"]
+    tel = backend.skip_tick()
+    assert tel.throughput == 0.0 and tel.restarting is True
+    assert backend.snapshot()["time"] == t0 + 1
+
+
+# ------------------------------------------------------------- resize -----
+def test_inject_resize_changes_capacity(case):
+    name, backend = case
+    backend.apply(_alloc(name, backend))
+    before = backend.capacity
+    if name in FLEET:
+        # fleet dialect: ResizeEvent re-caps the shared pool
+        backend.inject(ResizeEvent(tick=1, n_cpus=1))
+        assert backend.capacity == before - 3        # pool 4 -> 1
+    else:
+        backend.inject(ResizeEvent(tick=1, n_cpus=3))
+        assert backend.capacity == 3
+    # the backend still runs after the re-cap
+    tel = backend.apply(_alloc(name, backend))
+    assert isinstance(tel, Telemetry)
+
+
+# -------------------------------------------------------------- churn -----
+def test_churn_injection(case):
+    name, backend = case
+    if name not in FLEET:
+        with pytest.raises(UnsupportedEventError):
+            backend.inject(ChurnEvent(tick=0, kind="leave", trainer="a"))
+        return
+    assert set(backend.machine.active) == {"a", "b"}
+    backend.inject(ChurnEvent(tick=0, kind="leave", trainer="b"))
+    assert set(backend.machine.active) == {"a"}
+    tel = backend.apply(_alloc(name, backend))
+    assert set(tel["per_trainer"]) == {"a"}
+    backend.inject(ChurnEvent(tick=1, kind="join", trainer="b"))
+    assert set(backend.machine.active) == {"a", "b"}
+    tel = backend.apply(_alloc(name, backend))
+    assert set(tel["per_trainer"]) == {"a", "b"}
+    # unknown trainer / kind are rejected at injection time
+    with pytest.raises(ValueError):
+        backend.inject(ChurnEvent(tick=2, kind="leave", trainer="nope"))
+    with pytest.raises(ValueError):
+        backend.inject(ChurnEvent(tick=2, kind="explode", trainer="a"))
+
+
+# ----------------------------------------------------------- shutdown -----
+def test_shutdown_idempotent(case):
+    name, backend = case
+    backend.apply(_alloc(name, backend))
+    first = backend.shutdown()
+    second = backend.shutdown()
+    assert first is second          # cached accounting, not a re-teardown
+    if name in ("executor", "fleet_live"):
+        assert first["all_joined"] is True
+        assert first["oom_count"] == 0
+    # applying to a torn-down backend is a NAMED error on every substrate
+    with pytest.raises(RuntimeError, match="shut down"):
+        backend.apply(_alloc(name, backend))
+
+
+# ----------------------------------------------------------- snapshot -----
+def test_snapshot_has_clock_and_ooms(case):
+    name, backend = case
+    snap = backend.snapshot()
+    assert snap["time"] == 0 and snap["oom_count"] == 0
+    backend.apply(_alloc(name, backend))
+    assert backend.snapshot()["time"] == 1
+
+
+@pytest.mark.parametrize("name", sorted(SEEDED))
+def test_snapshot_deterministic_for_seeded_backends(name):
+    def trace(seed):
+        backend = _make(name, seed=seed)
+        tels = []
+        for _ in range(5):
+            tel = backend.apply(_alloc(name, backend))
+            tels.append((tel.throughput, tel.mem_mb, tel.used_cpus))
+        return tels, backend.snapshot()
+    tels_a, snap_a = trace(3)
+    tels_b, snap_b = trace(3)
+    assert tels_a == tels_b and snap_a == snap_b
+
+
+# --------------------------------------------------------- validation -----
+def test_invalid_allocation_rejected_at_the_boundary(case):
+    name, backend = case
+    with pytest.raises(AllocationError):
+        backend.apply(_bad_alloc(name, backend))
+
+
+# ---------------------------------------------------- session smoke -------
+def test_session_drives_every_backend(case):
+    """The same Session loop runs all four backends end to end."""
+    name, backend = case
+
+    class Hold:
+        name = "hold"
+
+        def propose(self, spec, machine, stats=None):
+            return _alloc(name, backend)
+
+        def observe(self, metrics):
+            self.last = metrics
+
+    opt = Hold()
+    res = Session(backend, opt).run(3)
+    assert res.ticks == 3 and len(res.used_cpus) == 3
+    assert isinstance(opt.last, Telemetry)
+    assert res.oom_count == 0
