@@ -1,26 +1,22 @@
-"""Shared benchmark machinery: cached pretrained agents + legacy shims.
+"""Shared benchmark machinery: cached pretrained agents + output helpers.
 
-The timeline runners that used to live here (`run_static` /
-`run_optimizer` / `run_fleet_optimizer` / `run_intune*`) are now
-one-PR deprecation shims over `repro.api.Session` — the single driver
-loop every benchmark and example delegates to. New code should use
-`repro.api` directly; the shims exist so external callers of the old
-dialect get one release of warning instead of a break, and they
-reproduce the legacy loops' outputs exactly (the fig5 golden suite
-enforces this byte-for-byte on the linear chains).
+The legacy timeline runners that once lived here (`run_static` /
+`run_optimizer` / `run_fleet_optimizer` / `run_intune*`) went through
+their one-PR deprecation-shim stage and are now REMOVED: every
+benchmark, example, and test drives `repro.api.Session` (or the
+`repro.api.tune` one-liner) directly — see the migration table in
+DESIGN.md §8. The fig5 golden suite pins that the direct Session path
+still reproduces the published numbers byte-for-byte.
 """
 from __future__ import annotations
 
 import json
 import os
-import warnings
 
-from repro.api import (ControllerBackend, DeadWindow, FrozenPolicy,
-                       RELAUNCH_TICKS, ResizeEvent, Session, SimBackend,
-                       as_backend, resize_events)
+from repro.api import FrozenPolicy, RELAUNCH_TICKS
 from repro.core.controller import InTune
 from repro.core.pretrain import load_agent_state, pretrain, save_agent
-from repro.data.simulator import Allocation, MachineSpec, PipelineSim
+from repro.data.simulator import Allocation
 
 AGENT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                          "agents")
@@ -29,8 +25,7 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 
 __all__ = ["AGENT_DIR", "OUT_DIR", "RELAUNCH_TICKS", "ReadaptPolicy",
            "get_agent_state", "save_json", "make_tuner",
-           "make_fleet_coordinator", "run_static", "run_optimizer",
-           "run_fleet_optimizer", "run_intune", "run_intune_protocol"]
+           "make_fleet_coordinator"]
 
 
 def get_agent_state(n_stages: int, head: str = "factored",
@@ -76,18 +71,6 @@ class ReadaptPolicy(FrozenPolicy):
         return self.alloc
 
 
-def _deprecated(old: str, new: str):
-    warnings.warn(
-        f"benchmarks.common.{old} is deprecated; use {new} "
-        f"(repro.api) instead", DeprecationWarning, stacklevel=3)
-
-
-def _as_schedule(resizes) -> list:
-    """The legacy loops accepted [(tick, n_cpus), ...] or {tick: n_cpus};
-    normalize to the pair list resize_events lifts."""
-    return list(dict(resizes or []).items())
-
-
 def make_fleet_coordinator(cluster, *, seed: int = 0, head: str = "factored",
                            finetune_ticks: int = 150, **kw):
     """Benchmark-grade FleetCoordinator: one cached pretrained agent per
@@ -105,88 +88,3 @@ def make_tuner(spec, machine, *, seed: int = 0, head: str = "factored",
     state = get_agent_state(spec.n_stages, head=head)
     return InTune(spec, machine, seed=seed, head=head, pretrained=state,
                   finetune_ticks=finetune_ticks)
-
-
-# ---------------------------------------------------------------------------
-# Deprecation shims: the legacy driver dialects, delegating to Session.
-# ---------------------------------------------------------------------------
-
-def run_static(spec, machine, alloc, ticks: int, *, resizes=None,
-               readapt=None, seed: int = 0):
-    """DEPRECATED: use repro.api.Session with a frozen/ReadaptPolicy
-    optimizer and ResizeEvent/DeadWindow events."""
-    _deprecated("run_static", "Session(SimBackend(...), ReadaptPolicy(...))")
-    resizes = _as_schedule(resizes)
-    events = resize_events(resizes)
-    if readapt is not None:
-        # the legacy protocol charges the relaunch window at EVERY
-        # scheduled resize tick (even a no-op re-cap re-profiles)
-        events += [DeadWindow(t, RELAUNCH_TICKS) for t, _ in resizes]
-    opt = ReadaptPolicy(alloc, readapt, seed=seed,
-                        resize_ticks=[t for t, _ in resizes])
-    res = Session(SimBackend(spec, machine, seed=seed), opt).run(
-        ticks, events=events)
-    rmap = dict(resizes)
-    res.extras["caps"] = [rmap.get(t, None) for t in range(ticks)]
-    return res
-
-
-def run_optimizer(opt, spec, machine, ticks: int, *, resizes=None,
-                  seed: int = 0, relaunch_dead: int = 0,
-                  sim_factory=PipelineSim, collect=None):
-    """DEPRECATED: use repro.api.Session over an explicit backend."""
-    _deprecated("run_optimizer", "Session(backend, opt).run(...)")
-    backend = as_backend(sim_factory(spec, machine, seed=seed))
-    return Session(backend, opt, spec=spec).run(
-        ticks, events=resize_events(_as_schedule(resizes)),
-        relaunch_dead=relaunch_dead, collect=collect)
-
-
-def run_fleet_optimizer(opt, cluster, ticks: int, *, seed: int = 0,
-                        relaunch_dead: int = 0, collect=None,
-                        backend: str = "sim", backend_kw=None):
-    """DEPRECATED: use repro.api.Session over a fleet backend (or
-    repro.api.tune(cluster, ...))."""
-    _deprecated("run_fleet_optimizer",
-                "Session(make_backend(..., cluster), opt)")
-    from repro.api import make_backend
-    if backend not in ("sim", "live"):
-        raise KeyError(f"unknown fleet backend {backend!r}; "
-                       f"known: ['sim', 'live']")
-    be = make_backend(backend, cluster, seed=seed, **(backend_kw or {}))
-    try:
-        res = Session(be, opt, spec=cluster).run(
-            ticks, relaunch_dead=relaunch_dead, collect=collect)
-    finally:
-        acct = be.shutdown()
-    if backend == "live":
-        res.extras["live"] = acct
-    return res
-
-
-def run_intune_protocol(spec, machine, ticks: int, *, resizes=None,
-                        seed: int = 0, head: str = "factored",
-                        finetune_ticks: int = 250):
-    """DEPRECATED: build a tuner (make_tuner) and drive it with
-    repro.api.Session over a SimBackend."""
-    _deprecated("run_intune_protocol",
-                "Session(SimBackend(...), make_tuner(...))")
-    tuner = make_tuner(spec, machine, seed=seed, head=head,
-                       finetune_ticks=finetune_ticks)
-    res = Session(SimBackend(spec, machine, seed=seed), tuner).run(
-        ticks, events=resize_events(_as_schedule(resizes)))
-    res.extras["tuner"] = tuner
-    return res
-
-
-def run_intune(spec, machine, ticks: int, *, resizes=None, seed: int = 0,
-               head: str = "factored", finetune_ticks: int = 250):
-    """DEPRECATED: use repro.api.Session over a ControllerBackend (the
-    self-driving paper-protocol path)."""
-    _deprecated("run_intune", "Session(ControllerBackend(make_tuner(...)))")
-    tuner = make_tuner(spec, machine, seed=seed, head=head,
-                       finetune_ticks=finetune_ticks)
-    res = Session(ControllerBackend(tuner)).run(
-        ticks, events=resize_events(_as_schedule(resizes)))
-    res.extras["tuner"] = tuner
-    return res

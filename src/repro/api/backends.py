@@ -7,6 +7,8 @@ metric dicts into `Telemetry`:
   SimBackend         PipelineSim (analytic single machine)
   ExecutorBackend    ThreadedPipeline (real threads, measured throughput,
                      budget-enforced OOM — the single-machine LiveFleet)
+  ProcessBackend     ProcessPipeline (real processes: true CPU
+                     contention, RSS-measured OOM, real serial sections)
   FleetSimBackend    FleetSim (N analytic trainers + pool + churn)
   LiveFleetBackend   LiveFleet (N real ThreadedPipelines)
   ControllerBackend  the legacy paper-protocol path: the InTune
@@ -34,6 +36,7 @@ from repro.api.validation import validate_allocation, validate_fleet_allocation
 from repro.data.executor import ThreadedPipeline
 from repro.data.fleet import (ClusterSpec, FleetBackend, FleetEvent,
                               FleetSim, TrainerSpec)
+from repro.data.live_fleet import RigSlot, _TrainerRig
 from repro.data.simulator import (MachineSpec, OOM_RESTART_TICKS,
                                   PipelineSim, graph_memory_mb)
 
@@ -78,7 +81,90 @@ class SimBackend(BackendBase):
         return self.sim.oom_count
 
 
-class ExecutorBackend(BackendBase):
+class _SingleRigBackend(BackendBase):
+    """Shared plumbing for the single-machine live backends (threaded
+    ExecutorBackend, process-based ProcessBackend): one `RigSlot` holds
+    the rig + OOM lifecycle; this base owns everything around it —
+    protocol properties, snapshot, resize, the measurement window, and
+    teardown accounting — so only each plane's `apply` judge differs."""
+
+    def __init__(self, window_s: float, queue_depth: int):
+        super().__init__()
+        self.window_s = float(window_s)
+        self.queue_depth = queue_depth
+        self.time = 0
+
+    def _launch(self, eff_cpus: Optional[int] = None):
+        raise NotImplementedError
+
+    def _measure_window(self, cap: int, alloc) -> float:
+        """Apply the allocation, sleep one window, return the measured
+        consumed-batch rate (the live-throughput contract)."""
+        self._slot.prepare(cap, alloc)
+        before = self._slot.rig.counters()
+        time.sleep(self.window_s)
+        return ThreadedPipeline.window_rate(before,
+                                            self._slot.rig.counters())
+
+    def _rig_extras(self) -> Dict[str, Any]:
+        """The measured stats() carried in Telemetry.extras, so learning
+        observers take their live branch — the next-state comes from the
+        same measurement source the agent acted on."""
+        return {k: v for k, v in self._slot.rig.pipe.stats().items()
+                if k != "throughput"}
+
+    def stats(self) -> Optional[dict]:
+        """The live stats() observation for propose(..., stats=...);
+        None while the process is down (OOM restart window)."""
+        return self._slot.rig.pipe.stats() if self._slot.live else None
+
+    # ---------------------------------------------------------- protocol --
+    def _resize(self, n_cpus: int):
+        self._machine = dataclasses.replace(self._machine, n_cpus=n_cpus)
+        if self._slot.live:
+            self._slot.rig.set_eff_cpus(n_cpus)
+
+    def _advance_clock(self):
+        self.time += 1
+
+    @property
+    def restart_left(self) -> int:
+        return self._slot.restart_left
+
+    @property
+    def crash_lost(self) -> int:
+        return self._slot.crash_lost
+
+    @property
+    def all_joined(self) -> bool:
+        return self._slot.all_joined
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"time": self.time, "oom_count": self._slot.oom_count,
+                "restart_left": self._slot.restart_left,
+                "n_cpus": self._machine.n_cpus}
+
+    def _do_shutdown(self) -> Dict[str, Any]:
+        dropped = self._slot.close(drain=True)
+        return {"dropped_batches": dropped,
+                "crash_lost": self._slot.crash_lost,
+                "all_joined": self._slot.all_joined,
+                "oom_count": self._slot.oom_count}
+
+    @property
+    def machine(self) -> MachineSpec:
+        return self._machine
+
+    @property
+    def capacity(self) -> int:
+        return self._machine.n_cpus
+
+    @property
+    def oom_count(self) -> int:
+        return self._slot.oom_count
+
+
+class ExecutorBackend(_SingleRigBackend):
     """A REAL ThreadedPipeline behind the protocol: the single-machine
     live backend.
 
@@ -102,27 +188,21 @@ class ExecutorBackend(BackendBase):
                  pipe: Optional[ThreadedPipeline] = None):
         # seed is accepted for factory-signature parity with SimBackend
         # (thread scheduling is the noise source here, not an RNG)
-        super().__init__()
-        self.window_s = float(window_s)
-        self.queue_depth = queue_depth
-        self.time = 0
-        self._oom_count = 0
-        self.restart_left = 0
-        self.crash_lost = 0
-        self.all_joined = True
+        super().__init__(window_s, queue_depth)
         self._over_budget = False
         if pipe is not None:
             self.spec = pipe.spec
             self._machine = pipe.machine
             self._trainer = None
-            self._rig = _ExternalRig(pipe)
+            self._slot = RigSlot(self._launch, rig=_ExternalRig(pipe))
             self._enforce_oom = False
         else:
             self.spec = spec
             self._machine = machine
             self._trainer = TrainerSpec(spec.name, spec, machine,
                                         model_latency)
-            self._rig = self._launch()
+            self._slot = RigSlot(self._launch)
+            self._slot.rig = self._launch(machine.n_cpus)
             self._enforce_oom = True
 
     @classmethod
@@ -130,10 +210,10 @@ class ExecutorBackend(BackendBase):
         """Adopt an existing user pipeline (external consumer)."""
         return cls(pipe=pipe, window_s=window_s)
 
-    def _launch(self):
-        from repro.data.live_fleet import _TrainerRig
-        return _TrainerRig(self._trainer, self._machine.n_cpus,
-                           self.queue_depth)
+    def _launch(self, eff_cpus: Optional[int] = None):
+        if eff_cpus is None:
+            eff_cpus = self._machine.n_cpus
+        return _TrainerRig(self._trainer, eff_cpus, self.queue_depth)
 
     # ------------------------------------------------------------- tick ---
     def apply(self, alloc) -> Telemetry:
@@ -143,91 +223,30 @@ class ExecutorBackend(BackendBase):
         used = int(np.sum(alloc.workers))
         cap = self._machine.n_cpus
         self.time += 1
-        if self.restart_left > 0:
-            self.restart_left -= 1
-            if self.restart_left == 0 and self._rig is None:
-                # dead window over: relaunch a fresh pipeline process
-                self._rig = self._launch()
+        # the shared RigSlot lifecycle: dead-window countdown + relaunch,
+        # budget-OOM kill (the simulator's judge verbatim), crash-loss
+        # accounting — one implementation with LiveFleet's per-trainer tick
+        if self._slot.tick_dead_window(cap):
             return Telemetry(0.0, mem, used, False, True)
         if self._enforce_oom and mem > self._machine.mem_mb:
-            # budget-enforced OOM, the simulator's judge verbatim: the
-            # process is killed (hard stop, no drain) and pays the same
-            # restart window before relaunch
-            self._oom_count += 1
-            self.restart_left = OOM_RESTART_TICKS
-            if self._rig is not None:
-                acct = self._rig.teardown(drain=False)
-                self.crash_lost += max(
-                    0, acct["delivered"] - acct["consumed"])
-                self.all_joined = self.all_joined and acct["joined"]
-                self._rig = None
+            self._slot.kill()
             return Telemetry(0.0, mem, used, True, True)
-        if self._rig.pipe.machine.n_cpus != cap:
-            self._rig.set_eff_cpus(cap)
-        self._rig.set_allocation(alloc)
-        before = self._rig.counters()
-        time.sleep(self.window_s)
-        tput = ThreadedPipeline.window_rate(before, self._rig.counters())
-        if self._enforce_oom and used > cap:
+        tput = self._measure_window(cap, alloc)
+        if self._enforce_oom:
             # owned rigs only: sleeps don't contend like real CPUs, so
             # charge the simulator's proportional over-subscription
             # slowdown in accounting. A wrapped user pipeline runs real
             # stage fns whose contention the measured rate already shows.
-            tput *= cap / used
+            tput = RigSlot.discount(tput, used, cap)
         # wrap mode reports (but cannot enforce) OOM: count each ENTRY
         # into the over-budget state so oom_count stays meaningful even
         # though the user-owned process is never killed
         oom_flag = (not self._enforce_oom) and mem > self._machine.mem_mb
         if oom_flag and not self._over_budget:
-            self._oom_count += 1
+            self._slot.oom_count += 1
         self._over_budget = oom_flag
-        # carry the measured executor stats (stage_latency, mem_frac, ...)
-        # so learning observers take their live branch — the next-state
-        # comes from the same measurement source the agent acted on
-        extras = {k: v for k, v in self._rig.pipe.stats().items()
-                  if k != "throughput"}
-        return Telemetry(tput, mem, used, oom_flag, False, extras)
-
-    def stats(self) -> Optional[dict]:
-        """The live stats() observation for propose(..., stats=...);
-        None while the process is down (OOM restart window)."""
-        return self._rig.pipe.stats() if self._rig is not None else None
-
-    # ---------------------------------------------------------- protocol --
-    def _resize(self, n_cpus: int):
-        self._machine = dataclasses.replace(self._machine, n_cpus=n_cpus)
-        if self._rig is not None:
-            self._rig.set_eff_cpus(n_cpus)
-
-    def _advance_clock(self):
-        self.time += 1
-
-    def snapshot(self) -> Dict[str, Any]:
-        return {"time": self.time, "oom_count": self._oom_count,
-                "restart_left": self.restart_left,
-                "n_cpus": self._machine.n_cpus}
-
-    def _do_shutdown(self) -> Dict[str, Any]:
-        dropped = 0
-        if self._rig is not None:
-            acct = self._rig.teardown(drain=True)
-            dropped = acct["dropped"]
-            self.all_joined = self.all_joined and acct["joined"]
-            self._rig = None
-        return {"dropped_batches": dropped, "crash_lost": self.crash_lost,
-                "all_joined": self.all_joined, "oom_count": self._oom_count}
-
-    @property
-    def machine(self) -> MachineSpec:
-        return self._machine
-
-    @property
-    def capacity(self) -> int:
-        return self._machine.n_cpus
-
-    @property
-    def oom_count(self) -> int:
-        return self._oom_count
+        return Telemetry(tput, mem, used, oom_flag, False,
+                         self._rig_extras())
 
 
 class _ExternalRig:
@@ -249,6 +268,84 @@ class _ExternalRig:
 
     def teardown(self, drain: bool = True, timeout: float = 5.0) -> dict:
         return self.pipe.shutdown(drain=drain, timeout=timeout)
+
+
+class ProcessBackend(_SingleRigBackend):
+    """A REAL ProcessPipeline behind the protocol: one OS-process pool
+    per stage (registered as "proc" in `repro.api.registry.BACKENDS`).
+
+    Everything the threaded backend charges in accounting is physics
+    here:
+
+      - throughput is the measured consumed-counter delta over a
+        `window_s` window, with TRUE CPU contention — there is no
+        over-subscription discount; over-placing workers slows the
+        measured rate because cores actually run out;
+      - memory is MEASURED: the OOM judge fires on the pipeline's
+        sampled resident bytes (`ProcessPipeline.rss_mb`: each worker's
+        private growth since spawn, from /proc) against
+        `machine.mem_mb`, then pays the same
+        kill + OOM_RESTART_TICKS dead window + relaunch lifecycle as
+        every other plane (the shared `RigSlot`). The spec's
+        `mem_per_worker_mb` is physically allocated per worker
+        (SpinWork ballast), so the memory knob moves real pages;
+      - `serial_frac` is realized by a real per-stage cross-process
+        serialized section (calibratable live: `repro.data.calibrate`).
+    """
+
+    def __init__(self, spec=None, machine: Optional[MachineSpec] = None,
+                 *, model_latency: float = 0.0, window_s: float = 0.1,
+                 queue_depth: int = 8, seed: int = 0, ballast: bool = True,
+                 rss_interval: float = 0.2):
+        # seed: factory-signature parity (OS scheduling is the noise)
+        super().__init__(window_s, queue_depth)
+        self.ballast = ballast
+        self.rss_interval = rss_interval
+        self.spec = spec
+        self._machine = machine
+        self._trainer = TrainerSpec(spec.name, spec, machine, model_latency)
+        self._slot = RigSlot(self._launch)
+        self._slot.rig = self._launch(machine.n_cpus)
+
+    def _launch(self, eff_cpus: Optional[int] = None):
+        from repro.data.proc_executor import ProcessPipeline, spin_stage_fns
+        if eff_cpus is None:
+            eff_cpus = self._machine.n_cpus
+
+        def make_pipe(trainer, eff, queue_depth):
+            return ProcessPipeline(
+                trainer.pipeline,
+                fns=spin_stage_fns(trainer.pipeline, ballast=self.ballast),
+                queue_depth=queue_depth,
+                machine=dataclasses.replace(trainer.machine, n_cpus=eff),
+                rss_interval=self.rss_interval)
+
+        return _TrainerRig(self._trainer, eff_cpus, self.queue_depth,
+                           make_pipe=make_pipe)
+
+    # ------------------------------------------------------------- tick ---
+    def apply(self, alloc) -> Telemetry:
+        self._check_open()
+        validate_allocation(self.spec, alloc)
+        used = int(np.sum(alloc.workers))
+        cap = self._machine.n_cpus
+        self.time += 1
+        if self._slot.tick_dead_window(cap):
+            # process is down: nothing resident to measure (unlike the
+            # threaded plane there is no accounting model to report)
+            return Telemetry(0.0, 0.0, used, False, True)
+        tput = self._measure_window(cap, alloc)
+        rss = self._slot.rig.pipe.rss_mb()
+        if rss > self._machine.mem_mb:
+            # the measured-RSS OOM judge: same kill + dead window +
+            # relaunch lifecycle, but the verdict comes from /proc, not
+            # from the graph_memory_mb declaration
+            self._slot.kill()
+            return Telemetry(0.0, rss, used, True, True)
+        # NO over-subscription discount: the contention is physical and
+        # already inside the measured rate
+        return Telemetry(tput, rss, used, False, False,
+                         self._rig_extras())
 
 
 class _FleetAdapter(BackendBase):

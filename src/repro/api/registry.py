@@ -21,7 +21,8 @@ from typing import Optional
 
 from repro.api.backend import Backend
 from repro.api.backends import (ExecutorBackend, FleetSimBackend,
-                                LiveFleetBackend, SimBackend)
+                                LiveFleetBackend, ProcessBackend,
+                                SimBackend)
 from repro.api.session import Session
 from repro.api.telemetry import RunResult
 from repro.data.fleet import ClusterSpec
@@ -32,10 +33,11 @@ from repro.data.fleet import ClusterSpec
 BACKENDS = {
     ("single", "sim"): SimBackend,
     ("single", "live"): ExecutorBackend,
+    ("single", "proc"): ProcessBackend,
     ("fleet", "sim"): FleetSimBackend,
     ("fleet", "live"): LiveFleetBackend,
 }
-_ALIASES = {"executor": "live"}
+_ALIASES = {"executor": "live", "process": "proc"}
 
 
 def make_backend(name: str, spec, machine=None, *, seed: int = 0,

@@ -1,8 +1,8 @@
 """Session: THE driver loop. Every benchmark, example, and test drives a
 backend through this one propose -> apply -> observe loop; the three
 near-duplicate tick loops that used to live in benchmarks/common.py
-(`run_static` / `run_optimizer` / `run_fleet_optimizer`) are now
-deprecation shims over it.
+(`run_static` / `run_optimizer` / `run_fleet_optimizer`) went through
+their one-PR deprecation-shim stage here and are deleted.
 
     backend = SimBackend(spec, machine, seed=0)
     opt     = make_optimizer("intune", spec, machine, seed=0)

@@ -39,22 +39,55 @@ def _set_maxsize(q: "queue.Queue", n: int):
 
 
 class _RateMeter:
+    """EWMA batches/s meter shared by the thread and process planes.
+
+    `mark()` feeds it one event (threaded workers); `mark_many(n)` feeds
+    a counter delta (the process plane syncs shared delivered-counters
+    into the same meter). `rate` is decayed ON READ: a meter whose EWMA
+    only updated at mark time would report its last healthy rate forever
+    once the stage starved or died, going stale exactly when the
+    Table-2 observation matters most — so a read caps the EWMA at
+    `1 / (time since the last mark)`, which is a no-op while marks are
+    on schedule and falls toward 0 for a stalled stage.
+    """
+
     def __init__(self, alpha: float = 0.2):
         self.alpha = alpha
-        self.rate = 0.0
+        self._ewma = 0.0
         self._last: Optional[float] = None
         self.count = 0
         self._lock = threading.Lock()
 
     def mark(self):
-        now = time.monotonic()
+        self.mark_many(1)
+
+    def mark_many(self, n: int, now: Optional[float] = None):
+        """Record `n` events since the previous mark (n=1 is a plain
+        mark; the process plane passes shared-counter deltas)."""
+        if n <= 0:
+            return
+        if now is None:
+            now = time.monotonic()
         with self._lock:
-            self.count += 1
+            self.count += n
             if self._last is not None:
                 dt = max(now - self._last, 1e-6)
-                inst = 1.0 / dt
-                self.rate = (1 - self.alpha) * self.rate + self.alpha * inst
+                inst = n / dt
+                self._ewma = (1 - self.alpha) * self._ewma \
+                    + self.alpha * inst
             self._last = now
+
+    @property
+    def rate(self) -> float:
+        with self._lock:
+            if self._last is None:
+                return 0.0
+            overdue = time.monotonic() - self._last
+            if overdue <= 1e-9:
+                return self._ewma
+            # while healthy the gap since the last mark is < 1/rate, so
+            # the cap is inert; a starved/dead stage decays as 1/overdue
+            return min(self._ewma, 1.0 / overdue)
 
 
 class _StagePool:

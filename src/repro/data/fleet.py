@@ -17,7 +17,7 @@ jobs. This module models that fleet:
 
 FleetSim runs one PipelineSim per trainer and speaks the same driver
 dialect as PipelineSim (`machine` / `apply` / `resize` / `oom_count`), so
-`benchmarks.common.run_optimizer` drives a fleet policy with the exact
+`repro.api.Session` drives a fleet policy with the exact
 propose -> apply -> observe loop used for single machines. Policies see
 the FleetState (active set, per-machine owned CPUs, pool) and answer with
 a FleetAllocation (per-trainer Allocation + pool grants).
@@ -118,7 +118,7 @@ class FleetAllocation:
     """Per-trainer pipeline allocations + shared-pool grants.
 
     The `workers` / `prefetch_mb` views flatten the fleet into the shape
-    single-machine drivers compare on (run_optimizer's changed-proposal
+    single-machine drivers compare on (Session's changed-proposal
     check), so the same driver loop serves both planes.
     """
     allocs: Dict[str, Allocation]

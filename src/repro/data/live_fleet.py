@@ -9,7 +9,7 @@ per trainer modeling the training loop (pulls batches, sleeps
 exactly where the simulator caps throughput).
 
 LiveFleet speaks the exact FleetSim driver dialect (`machine` / `apply`
-/ `resize` / `oom_count`), so `benchmarks.common.run_optimizer` and the
+/ `resize` / `oom_count`), so `repro.api.Session` and the
 `FleetCoordinator` drive it unchanged. Contract alignment with the sim:
 
   - THROUGHPUT is measured, not modeled: `apply` sets every active
@@ -34,7 +34,10 @@ Known sim-vs-live gaps (DESIGN.md §7): stage work is `time.sleep`, so a
 serial fraction is emulated by a per-stage lock (exact only for
 `serial_frac == 0`, which the live clusters below use), and CPU
 over-subscription does not physically contend — the simulator's
-proportional slowdown is charged in accounting instead.
+proportional slowdown is charged in accounting instead. The process
+plane (repro.data.proc_executor, DESIGN.md §9) closes both gaps with
+real CPU burns; this module also hosts the `RigSlot` lifecycle and
+`_TrainerRig` consumer rig that plane reuses.
 """
 from __future__ import annotations
 
@@ -97,20 +100,27 @@ def synthetic_stage_fns(spec: StageGraph) -> Dict[str, Callable]:
 
 
 class _TrainerRig:
-    """One live trainer: a ThreadedPipeline plus a consumer thread that
-    models the training loop — it pulls batches and sleeps
-    `model_latency` per batch, so a saturated model back-pressures the
-    pipeline through the (prefetch-bounded) output queue, the live
-    realization of the simulator's `1 / model_latency` throughput cap."""
+    """One live trainer: a pipeline plus a consumer thread that models
+    the training loop — it pulls batches and sleeps `model_latency` per
+    batch, so a saturated model back-pressures the pipeline through the
+    (prefetch-bounded) output queue, the live realization of the
+    simulator's `1 / model_latency` throughput cap.
+
+    `make_pipe(trainer, eff_cpus, queue_depth)` picks the execution
+    substrate; the default builds a sleep-based ThreadedPipeline (the
+    process plane passes a ProcessPipeline factory instead)."""
 
     def __init__(self, trainer: TrainerSpec, eff_cpus: int,
-                 queue_depth: int = 8):
+                 queue_depth: int = 8, make_pipe=None):
         self.trainer = trainer
-        self.pipe = ThreadedPipeline(
-            trainer.pipeline, fns=synthetic_stage_fns(trainer.pipeline),
-            queue_depth=queue_depth,
-            machine=dataclasses.replace(trainer.machine,
-                                        n_cpus=int(eff_cpus)))
+        if make_pipe is None:
+            self.pipe = ThreadedPipeline(
+                trainer.pipeline, fns=synthetic_stage_fns(trainer.pipeline),
+                queue_depth=queue_depth,
+                machine=dataclasses.replace(trainer.machine,
+                                            n_cpus=int(eff_cpus)))
+        else:
+            self.pipe = make_pipe(trainer, int(eff_cpus), queue_depth)
         self._stop = threading.Event()
         self._consumer = threading.Thread(target=self._model_loop,
                                           daemon=True)
@@ -132,6 +142,8 @@ class _TrainerRig:
     def set_eff_cpus(self, n: int):
         self.pipe.machine = dataclasses.replace(self.pipe.machine,
                                                 n_cpus=int(n))
+        if hasattr(self.pipe, "apply_cpu_cap"):
+            self.pipe.apply_cpu_cap()      # process plane: re-pin workers
 
     def counters(self) -> dict:
         return self.pipe.counters()
@@ -145,6 +157,82 @@ class _TrainerRig:
         acct = self.pipe.shutdown(drain=drain, timeout=timeout)
         acct["joined"] = acct["joined"] and not self._consumer.is_alive()
         return acct
+
+
+class RigSlot:
+    """One live trainer's kill / dead-window / relaunch lifecycle.
+
+    ExecutorBackend (single machine), LiveFleet (one slot per trainer),
+    and ProcessBackend all used to hand-roll the same tick: count a
+    restart window down and relaunch when it expires, hard-kill on the
+    OOM judge's verdict (no drain — an OOM is a crash), accumulate
+    crash-lost batches and the thread-leak flag. This class is that
+    tick, extracted so the paths cannot drift (the PR 4 deferred dedup;
+    both sites stay pinned by the executor-parity and live-fleet tests).
+
+    `launch(eff_cpus) -> rig` builds a fresh rig; `rig` is anything with
+    the _TrainerRig surface (pipe / set_allocation / set_eff_cpus /
+    counters / teardown).
+    """
+
+    def __init__(self, launch, rig=None):
+        self.launch = launch
+        self.rig = rig
+        self.restart_left = 0
+        self.oom_count = 0
+        self.crash_lost = 0
+        self.all_joined = True
+
+    @property
+    def live(self) -> bool:
+        return self.rig is not None
+
+    def tick_dead_window(self, eff_cpus: int) -> bool:
+        """True while this tick falls inside the dead window: counts it
+        down and relaunches a fresh rig the moment it expires (the
+        simulator's OOM_RESTART_TICKS protocol, verbatim)."""
+        if self.restart_left <= 0:
+            return False
+        self.restart_left -= 1
+        if self.restart_left == 0 and self.rig is None:
+            self.rig = self.launch(eff_cpus)
+        return True
+
+    def kill(self):
+        """The OOM judge's verdict: the process is killed — hard stop,
+        no drain — and pays the restart window before relaunch."""
+        self.oom_count += 1
+        self.restart_left = OOM_RESTART_TICKS
+        if self.rig is not None:
+            acct = self.rig.teardown(drain=False)
+            self.crash_lost += max(0, acct["delivered"] - acct["consumed"])
+            self.all_joined = self.all_joined and acct["joined"]
+            self.rig = None
+
+    def prepare(self, eff_cpus: int, alloc: Allocation):
+        """Sync the rig's CPU cap and apply the allocation — called for
+        every measuring trainer BEFORE any measurement window opens."""
+        if self.rig.pipe.machine.n_cpus != eff_cpus:
+            self.rig.set_eff_cpus(eff_cpus)
+        self.rig.set_allocation(alloc)
+
+    @staticmethod
+    def discount(tput: float, used: int, eff: int) -> float:
+        """Sleep-based rigs can't physically contend, so the simulator's
+        proportional over-subscription slowdown is charged in
+        accounting. The process plane must NOT call this — its
+        contention is real and already in the measured rate."""
+        return tput * (eff / used) if used > eff else tput
+
+    def close(self, drain: bool = True) -> int:
+        """Clean teardown (leave / shutdown); returns dropped batches."""
+        dropped = 0
+        if self.rig is not None:
+            acct = self.rig.teardown(drain=drain)
+            dropped = acct["dropped"]
+            self.all_joined = self.all_joined and acct["joined"]
+            self.rig = None
+        return dropped
 
 
 class LiveFleet(FleetBackend):
@@ -164,36 +252,54 @@ class LiveFleet(FleetBackend):
         super().__init__(cluster)
         self.window_s = float(window_s)
         self.queue_depth = queue_depth
-        self.oom_counts = {t.name: 0 for t in cluster.trainers}
-        self.restart_left = {t.name: 0 for t in cluster.trainers}
         self.dropped_batches = 0
-        self.crash_lost = 0
-        self.all_joined = True
-        self.rigs: Dict[str, _TrainerRig] = {}
         self._closed = False
+        self.slots: Dict[str, RigSlot] = {
+            t.name: RigSlot(self._make_launch(t)) for t in cluster.trainers}
         for t in cluster.trainers:
             if t.start_active:
-                self.rigs[t.name] = _TrainerRig(t, t.machine.n_cpus,
-                                                queue_depth)
+                self.slots[t.name].rig = self.slots[t.name].launch(
+                    t.machine.n_cpus)
+
+    def _make_launch(self, trainer: TrainerSpec):
+        return lambda eff: _TrainerRig(trainer, eff, self.queue_depth)
+
+    # ------------------------------------------------- legacy dict views --
+    @property
+    def rigs(self) -> Dict[str, _TrainerRig]:
+        """Live rigs by trainer name (membership = the process is up)."""
+        return {n: s.rig for n, s in self.slots.items() if s.rig is not None}
+
+    @property
+    def oom_counts(self) -> Dict[str, int]:
+        return {n: s.oom_count for n, s in self.slots.items()}
+
+    @property
+    def restart_left(self) -> Dict[str, int]:
+        return {n: s.restart_left for n, s in self.slots.items()}
+
+    @property
+    def crash_lost(self) -> int:
+        return sum(s.crash_lost for s in self.slots.values())
+
+    @property
+    def all_joined(self) -> bool:
+        return all(s.all_joined for s in self.slots.values())
 
     # ----------------------------------------------------------- churn ----
     def _on_join(self, name: str):
+        slot = self.slots[name]
         # a (re)joining machine is a fresh process: no restart debt
-        self.restart_left[name] = 0
-        if name not in self.rigs:
-            self.rigs[name] = _TrainerRig(self.cluster.trainer(name),
-                                          self._base[name], self.queue_depth)
+        slot.restart_left = 0
+        if slot.rig is None:
+            slot.rig = slot.launch(self._base[name])
 
     def _on_leave(self, name: str):
-        rig = self.rigs.pop(name, None)
-        if rig is not None:
-            acct = rig.teardown(drain=True)
-            self.dropped_batches += acct["dropped"]
-            self.all_joined = self.all_joined and acct["joined"]
+        self.dropped_batches += self.slots[name].close(drain=True)
 
     @property
     def oom_count(self) -> int:
-        return sum(self.oom_counts.values())
+        return sum(s.oom_count for s in self.slots.values())
 
     # ------------------------------------------------------------ tick ----
     def apply(self, falloc: FleetAllocation) -> dict:
@@ -212,37 +318,23 @@ class LiveFleet(FleetBackend):
             mem = graph_memory_mb(trainer.pipeline, alloc.workers,
                                   alloc.prefetch_mb)
             used = int(np.sum(alloc.workers))
-            if self.restart_left[name] > 0:
-                self.restart_left[name] -= 1
-                if self.restart_left[name] == 0 and name not in self.rigs:
-                    # dead window over: relaunch a fresh pipeline process
-                    self.rigs[name] = _TrainerRig(trainer, eff,
-                                                  self.queue_depth)
+            slot = self.slots[name]
+            if slot.tick_dead_window(eff):
                 per[name] = {"throughput": 0.0, "mem_mb": mem, "oom": False,
                              "restarting": True, "used_cpus": used,
                              "eff_cpus": eff}
                 continue
             if mem > trainer.machine.mem_mb:
                 # budget-enforced OOM (the simulator's judge, verbatim):
-                # the process is killed — hard stop, no drain — and pays
-                # the same restart window before relaunch
-                self.oom_counts[name] += 1
-                self.restart_left[name] = OOM_RESTART_TICKS
-                rig = self.rigs.pop(name, None)
-                if rig is not None:
-                    acct = rig.teardown(drain=False)
-                    self.crash_lost += max(
-                        0, acct["delivered"] - acct["consumed"])
-                    self.all_joined = self.all_joined and acct["joined"]
+                # kill + OOM_RESTART_TICKS dead window, via the shared
+                # RigSlot lifecycle
+                slot.kill()
                 per[name] = {"throughput": 0.0, "mem_mb": mem, "oom": True,
                              "restarting": True, "used_cpus": used,
                              "eff_cpus": eff}
                 continue
-            rig = self.rigs[name]
-            if rig.pipe.machine.n_cpus != eff:
-                rig.set_eff_cpus(eff)
-            rig.set_allocation(alloc)
-            measuring.append((name, rig, mem, used, eff))
+            slot.prepare(eff, alloc)
+            measuring.append((name, slot.rig, mem, used, eff))
         # one shared measurement window: every allocation above is applied
         # BEFORE any trainer is measured, so pool re-caps and grant moves
         # land atomically across the fleet
@@ -251,10 +343,9 @@ class LiveFleet(FleetBackend):
             time.sleep(self.window_s)
         for name, rig, mem, used, eff in measuring:
             tput = ThreadedPipeline.window_rate(before[name], rig.counters())
-            if used > eff:
-                # sleeps don't contend like real CPUs: charge the sim's
-                # proportional over-subscription slowdown in accounting
-                tput *= eff / used
+            # sleeps don't contend like real CPUs: charge the sim's
+            # proportional over-subscription slowdown in accounting
+            tput = RigSlot.discount(tput, used, eff)
             per[name] = {"throughput": tput, "mem_mb": mem, "oom": False,
                          "restarting": False, "used_cpus": used,
                          "eff_cpus": eff}
@@ -275,10 +366,8 @@ class LiveFleet(FleetBackend):
         losses, and whether every thread ever started was joined."""
         if not self._closed:
             self._closed = True
-            for name in list(self.rigs):
-                acct = self.rigs.pop(name).teardown(drain=True)
-                self.dropped_batches += acct["dropped"]
-                self.all_joined = self.all_joined and acct["joined"]
+            for slot in self.slots.values():
+                self.dropped_batches += slot.close(drain=True)
             self._acct = {"dropped_batches": self.dropped_batches,
                           "crash_lost": self.crash_lost,
                           "all_joined": self.all_joined,

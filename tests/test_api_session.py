@@ -1,22 +1,18 @@
 """repro.api surface: Session semantics, the tune() one-liner, typed
-results, allocation validation, and the one-PR deprecation shims.
+results, and allocation validation.
 
-The shim tests pin BOTH halves of the deprecation contract: the
-DeprecationWarning fires, and the shim's output matches the direct
-Session path float-for-float (the shims must reproduce the legacy
-loops exactly — the fig5 golden suite enforces the same at the
-benchmark level)."""
-import warnings
-
+The legacy benchmarks.common loops finished their one-PR deprecation
+cycle and are gone; the protocol-semantics pins that used to ride on
+the shims now exercise the direct Session path (and one test guards
+that the shims stay deleted)."""
 import numpy as np
 import pytest
 
-from repro.api import (AllocationError, ControllerBackend, DeadWindow,
-                       FleetSimBackend, RELAUNCH_TICKS, ResizeEvent,
-                       RunResult, Session, SimBackend, Telemetry, tune,
-                       make_backend, resize_events, validate_allocation,
-                       validate_fleet_allocation)
-from repro.core.optimizer import make_fleet_optimizer, make_optimizer
+from repro.api import (AllocationError, DeadWindow, RELAUNCH_TICKS,
+                       ResizeEvent, RunResult, Session, SimBackend,
+                       Telemetry, tune, make_backend, resize_events,
+                       validate_allocation, validate_fleet_allocation)
+from repro.core.optimizer import make_optimizer
 from repro.data.fleet import (ClusterSpec, FleetAllocation, FleetEvent,
                               TrainerSpec, demo_cluster)
 from repro.data.pipeline import criteo_pipeline
@@ -167,38 +163,24 @@ def test_sim_backend_rejects_bad_allocation_before_apply():
     assert backend.snapshot()["time"] == 0      # nothing was applied
 
 
-# ----------------------------------------------- deprecation shims --------
-def _assert_same_series(a, b):
-    for key in ("throughput", "used_cpus", "mem_mb"):
-        assert list(a[key]) == list(b[key]), key
-    assert a["oom_count"] == b["oom_count"]
-
-
-def test_run_optimizer_shim_warns_and_matches_session():
-    from benchmarks import common
-    resizes = [(3, 32), (6, 96)]
-    with pytest.warns(DeprecationWarning, match="run_optimizer"):
-        legacy = common.run_optimizer(
-            make_optimizer("heuristic", SPEC, MACHINE), SPEC, MACHINE, 10,
-            resizes=resizes, relaunch_dead=2)
-    direct = Session(SimBackend(SPEC, MACHINE, seed=0),
-                     make_optimizer("heuristic", SPEC, MACHINE)).run(
-        10, events=resize_events(resizes), relaunch_dead=2)
-    _assert_same_series(legacy, direct)
-
-
-def test_run_static_shim_warns_and_matches_legacy_protocol():
-    """The shim must reproduce the pre-API run_static loop exactly,
-    including the quirk that a readapt policy pays the relaunch window
-    at EVERY scheduled resize tick (even a same-cap re-cap)."""
-    from benchmarks import common
+# ------------------------------------------- legacy protocol, direct ------
+def test_readapt_policy_reproduces_legacy_static_protocol():
+    """The direct Session path (ReadaptPolicy + ResizeEvent/DeadWindow)
+    must reproduce the pre-API run_static loop exactly, including the
+    quirk that a readapt policy pays the relaunch window at EVERY
+    scheduled resize tick (even a same-cap re-cap). This pin used to
+    ride on the deprecation shim; the shim is gone, the protocol
+    contract is not."""
+    from benchmarks.common import ReadaptPolicy
     from repro.core import baselines as B
     resizes = [(0, 64), (20, 32)]
     alloc = B.heuristic_even(SPEC, MACHINE)
-    with pytest.warns(DeprecationWarning, match="run_static"):
-        res = common.run_static(SPEC, MACHINE, alloc, 50, resizes=resizes,
-                                readapt=lambda s, m, seed:
-                                B.heuristic_even(s, m))
+    events = resize_events(resizes) + [DeadWindow(t, RELAUNCH_TICKS)
+                                       for t, _ in resizes]
+    opt = ReadaptPolicy(alloc, lambda s, m, seed: B.heuristic_even(s, m),
+                        seed=0, resize_ticks=[t for t, _ in resizes])
+    res = Session(SimBackend(SPEC, MACHINE, seed=0), opt).run(
+        50, events=events)
     # hand-rolled legacy loop (the pre-PR4 implementation, verbatim)
     from repro.data.simulator import PipelineSim
     sim = PipelineSim(SPEC, MACHINE, seed=0)
@@ -221,21 +203,6 @@ def test_run_static_shim_warns_and_matches_legacy_protocol():
     assert list(res["throughput"]) == tput
     assert list(res["used_cpus"]) == used
     assert list(res["mem_mb"]) == mem
-    assert res["caps"][0] == 64 and res["caps"][1] is None
-
-
-def test_shims_accept_legacy_dict_resizes():
-    """The legacy loops took resizes as [(tick, cap), ...] OR
-    {tick: cap}; the shims must keep accepting both."""
-    from benchmarks import common
-    opt_a = make_optimizer("heuristic", SPEC, MACHINE)
-    opt_b = make_optimizer("heuristic", SPEC, MACHINE)
-    with pytest.warns(DeprecationWarning):
-        as_list = common.run_optimizer(opt_a, SPEC, MACHINE, 8,
-                                       resizes=[(3, 32)])
-        as_dict = common.run_optimizer(opt_b, SPEC, MACHINE, 8,
-                                       resizes={3: 32})
-    assert list(as_list["throughput"]) == list(as_dict["throughput"])
 
 
 def test_telemetry_items_and_values():
@@ -245,41 +212,15 @@ def test_telemetry_items_and_values():
     assert {k: v for k, v in tel.items()} == tel.to_dict()
 
 
-def test_run_intune_shims_warn_and_match_session():
+def test_deprecation_shims_are_gone():
+    """The one-PR deprecation window is over: benchmarks.common must not
+    grow the legacy loops back (ROADMAP: 'can be dropped next PR')."""
     from benchmarks import common
-    small = MachineSpec(n_cpus=16, mem_mb=16384.0)
-    with pytest.warns(DeprecationWarning, match="run_intune"):
-        legacy = common.run_intune(SPEC, small, 30, seed=0)
-    tuner = common.make_tuner(SPEC, small, seed=0)
-    direct = Session(ControllerBackend(tuner)).run(30)
-    assert list(legacy["throughput"]) == list(direct["throughput"])
-    assert legacy["oom_count"] == direct["oom_count"]
-    assert legacy["tuner"] is not None
-    with pytest.warns(DeprecationWarning, match="run_intune_protocol"):
-        legacy_p = common.run_intune_protocol(SPEC, small, 30, seed=0)
-    tuner2 = common.make_tuner(SPEC, small, seed=0)
-    direct_p = Session(SimBackend(SPEC, small, seed=0), tuner2).run(30)
-    assert list(legacy_p["throughput"]) == list(direct_p["throughput"])
-
-
-def test_run_fleet_optimizer_shim_warns_and_matches_session():
-    from benchmarks import common
-    cluster = demo_cluster(60)
-    with pytest.warns(DeprecationWarning, match="run_fleet_optimizer"):
-        legacy = common.run_fleet_optimizer(
-            make_fleet_optimizer("fleet_even", cluster, seed=0), cluster,
-            20, seed=0, relaunch_dead=RELAUNCH_TICKS)
-    direct = Session(FleetSimBackend(cluster, seed=0),
-                     make_fleet_optimizer("fleet_even", cluster,
-                                          seed=0)).run(
-        20, relaunch_dead=RELAUNCH_TICKS)
-    _assert_same_series(legacy, direct)
-    with pytest.raises(KeyError, match="unknown fleet backend"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            common.run_fleet_optimizer(
-                make_fleet_optimizer("fleet_even", cluster), cluster, 5,
-                backend="warp")
+    for name in ("run_static", "run_optimizer", "run_fleet_optimizer",
+                 "run_intune", "run_intune_protocol"):
+        assert not hasattr(common, name), \
+            f"benchmarks.common.{name} should stay deleted"
+        assert name not in common.__all__
 
 
 # ------------------------------------------------ constants / events ------

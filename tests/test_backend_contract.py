@@ -1,16 +1,17 @@
-"""Backend-protocol conformance: one parametrized suite, four backends.
+"""Backend-protocol conformance: one parametrized suite, five backends.
 
 The `repro.api.Backend` contract is what makes the Session driver (and
 everything above it) substrate-agnostic, so the contract itself is
 tested, not assumed: every backend — analytic sim, threaded executor,
-fleet sim, live fleet — must present the same `apply -> Telemetry`
-surface, accept ResizeEvents, tear down idempotently, and (fleet
-backends) accept injected ChurnEvents. Seeded (analytic) backends must
-additionally replay byte-identically from the same seed.
+process executor, fleet sim, live fleet — must present the same
+`apply -> Telemetry` surface, accept ResizeEvents, tear down
+idempotently, and (fleet backends) accept injected ChurnEvents. Seeded
+(analytic) backends must additionally replay byte-identically from the
+same seed.
 
-The live backends run REAL threads here: pipelines are tiny (ms-scale
-stage costs, ~0.04s measurement windows) so the whole suite stays
-tier-1 fast.
+The live backends run REAL threads (and, for "proc", real worker
+processes) here: pipelines are tiny (ms-scale stage costs, ~0.04s
+measurement windows) so the whole suite stays tier-1 fast.
 """
 import numpy as np
 import pytest
@@ -22,10 +23,16 @@ from repro.data.fleet import ClusterSpec, TrainerSpec
 from repro.data.live_fleet import live_linear_pipeline
 from repro.data.simulator import Allocation, MachineSpec
 
-BACKENDS = ["sim", "executor", "fleet_sim", "fleet_live"]
+BACKENDS = ["sim", "executor", "proc", "fleet_sim", "fleet_live"]
 FLEET = {"fleet_sim", "fleet_live"}
 SEEDED = {"sim", "fleet_sim"}     # analytic: same seed => same bytes
+LIVE = {"executor", "proc", "fleet_live"}     # real threads / processes
 LIVE_KW = {"window_s": 0.04}
+# model_latency throttles the single-machine rigs' background
+# consumption: conformance asserts contracts, not rates, and an
+# unthrottled proc rig would burn real cores for the whole fixture
+# lifetime (burstable CI hosts deplete their CPU budget)
+SINGLE_KW = {**LIVE_KW, "model_latency": 0.1}
 
 
 def _spec():
@@ -52,7 +59,12 @@ def _make(name: str, seed: int = 0) -> Backend:
         return make_backend("sim", _spec(), _machine(), seed=seed)
     if name == "executor":
         return make_backend("executor", _spec(), _machine(), seed=seed,
-                            **LIVE_KW)
+                            **SINGLE_KW)
+    if name == "proc":
+        # ballast off: conformance exercises the contract, not the
+        # memory physics (tests/test_proc_executor.py covers those)
+        return make_backend("proc", _spec(), _machine(), seed=seed,
+                            ballast=False, **SINGLE_KW)
     if name == "fleet_sim":
         return make_backend("sim", _cluster(), seed=seed)
     return make_backend("live", _cluster(), seed=seed, **LIVE_KW)
@@ -164,7 +176,7 @@ def test_shutdown_idempotent(case):
     first = backend.shutdown()
     second = backend.shutdown()
     assert first is second          # cached accounting, not a re-teardown
-    if name in ("executor", "fleet_live"):
+    if name in LIVE:
         assert first["all_joined"] is True
         assert first["oom_count"] == 0
     # applying to a torn-down backend is a NAMED error on every substrate

@@ -1,0 +1,318 @@
+"""ProcessPipeline + calibration: the process plane's own suite.
+
+Three layers:
+  - mechanics (tier-1, sleep-free): the ThreadedPipeline contract on
+    real worker processes — round trip, join alignment, clean teardown
+    accounting — plus the stale-rate-meter regression (a starved stage
+    must report a falling rate, not its last healthy EWMA) and the
+    closed-form Amdahl fit.
+  - physics (slow): measured RSS moves with the worker ballast; the
+    measured-RSS OOM judge kills, pays the dead window, and relaunches.
+  - sim <-> proc transfer (slow): measured throughput RANKS candidate
+    allocations the way PipelineSim predicts (the process-plane sibling
+    of tests/test_sim_vs_executor.py — rank-based, never absolute), and
+    calibration recovers a designed serial_frac within 20%.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.calibrate import calibrate_stagegraph, fit_amdahl
+from repro.data.executor import _RateMeter, ThreadedPipeline
+from repro.data.pipeline import StageGraph, StageSpec
+from repro.data.proc_executor import ProcessPipeline, spin_stage_fns
+from repro.data.simulator import (Allocation, MachineSpec,
+                                  OOM_RESTART_TICKS, PipelineSim)
+
+
+def _stage(name, cost, serial=0.0, inputs=(), mem=4.0):
+    return StageSpec(name, "udf", cost=cost, serial_frac=serial,
+                     mem_per_worker_mb=mem, inputs=inputs)
+
+
+# ------------------------------------------------- rate-meter regression --
+def test_rate_meter_decays_on_read():
+    """ISSUE 5 satellite: the EWMA only updated inside mark(), so a
+    dead stage reported its last healthy rate forever. The rate must
+    now decay on read, falling toward 0 for a stalled stage."""
+    m = _RateMeter(alpha=0.5)
+    for _ in range(8):
+        m.mark()
+        time.sleep(0.01)
+    healthy = m.rate
+    assert healthy > 20.0           # ~100/s marks, EWMA mostly converged
+    time.sleep(0.3)
+    stale = m.rate
+    assert stale <= 1.0 / 0.3 + 0.5          # capped by 1/overdue
+    assert stale < healthy / 2               # fell, did not stick
+    time.sleep(0.2)
+    assert m.rate < stale                    # keeps falling toward 0
+
+
+def test_rate_meter_mark_many_matches_counter_feed():
+    m = _RateMeter(alpha=1.0)       # alpha 1: rate == last window rate
+    m.mark_many(5, now=100.0)       # first mark: seeds the clock
+    m.mark_many(10, now=102.0)      # 10 events over 2s
+    # read immediately (inject no staleness): EWMA is 5/s
+    assert m.count == 15
+    assert m._ewma == pytest.approx(5.0)
+
+
+def test_stalled_stage_stats_fall_toward_zero():
+    """End-to-end: a ThreadedPipeline whose stream ends keeps serving
+    stats(); the reported stage rates must decay, not freeze."""
+    produced = [0]
+
+    def src():
+        if produced[0] >= 15:
+            return None             # EOS: the stage starves from here
+        produced[0] += 1
+        return produced[0]
+
+    spec = StageGraph("lin2", (_stage("src", 0.001),
+                               _stage("sink", 0.001, inputs=("src",))),
+                      batch_mb=1.0)
+    pipe = ThreadedPipeline(spec, fns={"src": src, "sink": lambda x: x},
+                            queue_depth=4, item_mb=1.0)
+    try:
+        got = 0
+        while True:
+            try:
+                pipe.get_batch(timeout=5.0)
+                got += 1
+            except StopIteration:
+                break
+        assert got >= 10
+        time.sleep(0.4)
+        rates = pipe.stats()["stage_rate"]
+        assert all(r <= 1.0 / 0.4 + 1.0 for r in rates), rates
+    finally:
+        pipe.stop()
+
+
+# ----------------------------------------------------- amdahl fit (math) --
+def test_fit_amdahl_recovers_exact_curve():
+    cost, s = 0.02, 0.3
+    rates = [1.0 / (cost * (s + (1 - s) / a)) for a in (1, 2, 3, 4)]
+    c_hat, s_hat = fit_amdahl((1, 2, 3, 4), rates)
+    assert c_hat == pytest.approx(cost)
+    assert s_hat == pytest.approx(s)
+
+
+def test_fit_amdahl_edge_cases():
+    # single point: underdetermined -> cost = 1/rate, serial 0
+    c_hat, s_hat = fit_amdahl([2], [10.0])
+    assert c_hat == pytest.approx(0.1) and s_hat == 0.0
+    # perfectly linear scaling -> serial 0
+    c_hat, s_hat = fit_amdahl((1, 2, 4), [10.0, 20.0, 40.0])
+    assert c_hat == pytest.approx(0.1) and s_hat == pytest.approx(0.0)
+    # fully serial: flat curve -> serial 1
+    c_hat, s_hat = fit_amdahl((1, 2, 4), [10.0, 10.0, 10.0])
+    assert s_hat == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        fit_amdahl([], [])
+
+
+# ------------------------------------------------------- proc mechanics ---
+def test_process_pipeline_round_trip_and_clean_teardown():
+    spec = StageGraph("p2", (_stage("src", 0.002),
+                             _stage("work", 0.002, inputs=("src",))),
+                      batch_mb=1.0)
+    pipe = ProcessPipeline(spec, machine=MachineSpec(n_cpus=2,
+                                                     mem_mb=4096.0),
+                           item_mb=1.0)
+    try:
+        pipe.set_allocation([1, 2], prefetch_mb=8.0)
+        assert pipe.worker_counts() == [1, 2]
+        for _ in range(12):
+            assert pipe.get_batch(timeout=20.0) is not None
+        c = pipe.counters()
+        assert c["consumed"] == 12 and c["delivered"] >= 12
+        stats = pipe.stats()
+        assert stats["workers"] == [1, 2]
+        assert stats["rss_mb"] > 0.0         # measured, not declared
+        assert stats["mem_frac"] == stats["rss_mb"] / 4096.0
+    finally:
+        acct = pipe.shutdown(drain=True)
+    assert acct["joined"] is True
+    assert acct["dropped"] == 0
+    assert acct["delivered"] == acct["consumed"] + acct["drained"]
+
+
+def test_process_pipeline_join_graph_aligned():
+    spec = StageGraph("j4", (
+        _stage("a", 0.002), _stage("b", 0.002),
+        _stage("j", 0.001, inputs=("a", "b")),
+        _stage("s", 0.001, inputs=("j",)),
+    ), batch_mb=1.0)
+    pipe = ProcessPipeline(spec, machine=MachineSpec(n_cpus=2,
+                                                     mem_mb=4096.0),
+                           item_mb=1.0)
+    try:
+        pipe.set_allocation([1, 1, 1, 1], prefetch_mb=8.0)
+        for _ in range(8):
+            item = pipe.get_batch(timeout=20.0)
+            # join pairs one item per input: (a_item, b_item) forwarded
+            assert isinstance(item, tuple) and len(item) == 2
+    finally:
+        acct = pipe.shutdown(drain=True)
+    assert acct["joined"] is True and acct["dropped"] == 0
+
+
+def test_process_pipeline_prefetch_gate_rebounds_live():
+    spec = StageGraph("p1", (_stage("src", 0.001),), batch_mb=1.0)
+    pipe = ProcessPipeline(spec, machine=MachineSpec(n_cpus=1,
+                                                     mem_mb=4096.0),
+                           item_mb=1.0)
+    try:
+        pipe.set_allocation([1], prefetch_mb=4.0)
+        assert pipe.prefetch_depth == 4
+        pipe.set_allocation([1], prefetch_mb=32.0)
+        assert pipe.prefetch_depth == 32
+    finally:
+        pipe.shutdown(drain=False)
+
+
+# ------------------------------------------------------- memory physics ---
+@pytest.mark.slow
+def test_rss_grows_with_worker_ballast():
+    spec = StageGraph("mem1", (
+        StageSpec("src", "source", cost=0.005, serial_frac=0.0,
+                  mem_per_worker_mb=48.0),), batch_mb=1.0)
+    pipe = ProcessPipeline(spec, fns=spin_stage_fns(spec),
+                           machine=MachineSpec(n_cpus=4, mem_mb=8192.0),
+                           item_mb=1.0)
+    try:
+        pipe.set_allocation([1], prefetch_mb=8.0)
+        time.sleep(1.2)                      # calibration + ballast touch
+        rss1 = pipe.rss_mb()
+        assert rss1 > 30.0                   # one worker's ballast resident
+        pipe.set_allocation([3], prefetch_mb=8.0)
+        time.sleep(1.5)
+        rss3 = pipe.rss_mb()
+        # two more workers = two more 48MB ballasts (Pss-shared pages make
+        # the exact delta fuzzy; 60MB of the designed 96MB must show up)
+        assert rss3 > rss1 + 60.0, (rss1, rss3)
+    finally:
+        pipe.shutdown(drain=False)
+
+
+@pytest.mark.slow
+def test_proc_backend_measured_oom_kill_and_relaunch():
+    """The measured-RSS OOM judge: a machine whose mem_mb is below the
+    pipeline's real resident footprint OOMs, pays OOM_RESTART_TICKS dead
+    ticks, relaunches, and (still over) crash-loops — the Fig. 5B
+    behavior on real processes."""
+    from repro.api import make_backend
+    spec = StageGraph("oom2", (
+        StageSpec("src", "source", cost=0.004, serial_frac=0.0,
+                  mem_per_worker_mb=48.0),
+        StageSpec("work", "udf", cost=0.008, serial_frac=0.0,
+                  mem_per_worker_mb=48.0, inputs=("src",)),
+    ), batch_mb=1.0)
+    # two workers x 48MB touched ballast = ~96MB of measured private
+    # pages against a 64MB machine: the kernel-observed verdict
+    be = make_backend("proc", spec, MachineSpec(n_cpus=4, mem_mb=64.0),
+                      window_s=0.05, ballast=True)
+    alloc = Allocation(np.ones(2, dtype=int), prefetch_mb=16.0)
+    try:
+        time.sleep(1.0)                      # calibration + ballast touch
+        tel = be.apply(alloc)
+        assert tel.oom is True and tel.restarting is True
+        assert tel.mem_mb > 64.0             # the measured verdict
+        assert be.oom_count == 1
+        for _ in range(OOM_RESTART_TICKS):
+            tel = be.apply(alloc)
+            assert tel.restarting is True and tel.throughput == 0.0
+            assert tel.oom is False
+        # dead window expired: the relaunch happened on its last tick
+        assert be.stats() is not None
+        time.sleep(1.0)                      # fresh workers re-ballast
+        tel = be.apply(alloc)                # still over: crash loop
+        assert tel.oom is True and be.oom_count == 2
+    finally:
+        acct = be.shutdown()
+    assert acct["all_joined"] is True
+    assert acct["oom_count"] == 2
+
+
+# ------------------------------------------------- sim <-> proc transfer --
+@pytest.mark.slow
+def test_sim_vs_proc_differential_ranking():
+    """Measured throughput must rank candidate allocations the way
+    PipelineSim predicts (rank-based: absolute rates read low under IPC
+    overhead and host virtualization, rankings transfer).
+
+    Design notes for a small/throttled host: the winning candidate's
+    CPU demand stays near the host's real capacity (misplacing a worker
+    on the cheap stage vs placing it on the bottleneck), and the two
+    candidates are measured INTERLEAVED so second-scale host-speed
+    drift hits both symmetrically."""
+    from repro.api import make_backend
+    spec = StageGraph("d2", (_stage("src", 0.005),
+                             _stage("work", 0.06, inputs=("src",))),
+                      batch_mb=1.0)
+    candidates = [[2, 1], [1, 2]]    # waste on src vs fix the bottleneck
+    sim = PipelineSim(spec, MachineSpec(n_cpus=64, mem_mb=65536.0))
+    predicted = [sim.throughput(Allocation(np.asarray(w, dtype=int)))
+                 for w in candidates]
+    assert predicted[1] / predicted[0] >= 1.9    # designed separation
+    be = make_backend("proc", spec, MachineSpec(n_cpus=8, mem_mb=8192.0),
+                      window_s=0.4, ballast=False)
+    sums = [0.0, 0.0]
+    try:
+        time.sleep(1.0)                      # worker spin calibration
+        for _ in range(3):
+            for i, w in enumerate(candidates):
+                alloc = Allocation(np.asarray(w, dtype=int),
+                                   prefetch_mb=16.0)
+                be.apply(alloc)              # settle: resize + warm pools
+                time.sleep(0.5)
+                sums[i] += float(np.mean(
+                    [be.apply(alloc).throughput for _ in range(2)]))
+    finally:
+        be.shutdown()
+    measured = [s / 3.0 for s in sums]
+    ranked = (np.argsort(predicted).tolist()
+              == np.argsort(measured).tolist()
+              and measured[1] > measured[0] * 1.1)   # real, not noise
+    if not ranked and measured[0] < 0.85 * predicted[0]:
+        # a burstable host that has exhausted its CPU budget cannot even
+        # realize the BASELINE candidate (~1 core of demand), so no wall
+        # measurement can separate candidates: the rank claim is
+        # untestable here rather than false. Only skip when the ranking
+        # actually failed AND the baseline shows the capacity cap — a
+        # healthy host must still prove the transfer.
+        pytest.skip(f"host too throttled for rank transfer: baseline "
+                    f"measured {measured[0]:.1f} of {predicted[0]:.1f} "
+                    f"predicted b/s")
+    assert ranked, f"sim ranks {predicted} but proc measures {measured}"
+
+
+@pytest.mark.slow
+def test_calibration_recovers_designed_serial_frac():
+    """The acceptance bar: sweep workers, fit Amdahl, recover a designed
+    serial_frac within 20% (and the designed cost to ~30%); the
+    calibrated StageGraph must be directly consumable by the sim."""
+    spec = StageGraph("cal2", (
+        StageSpec("par", "source", cost=0.06, serial_frac=0.0,
+                  mem_per_worker_mb=4.0),
+        StageSpec("ser", "udf", cost=0.12, serial_frac=0.5,
+                  mem_per_worker_mb=4.0, inputs=("par",)),
+    ), batch_mb=1.0)
+    cal, report = calibrate_stagegraph(spec, workers=(1, 2, 3),
+                                       window_s=2.0)
+    ser = report["ser"]
+    assert abs(ser["serial_frac"] - 0.5) <= 0.1, report
+    assert abs(ser["cost"] - 0.12) <= 0.03, report
+    par = report["par"]
+    assert par["serial_frac"] <= 0.15, report
+    assert abs(par["cost"] - 0.06) <= 0.015, report
+    # the calibrated graph feeds the analytic plane directly: the
+    # measured sim <-> live closure
+    sim = PipelineSim(cal, MachineSpec(n_cpus=8, mem_mb=8192.0))
+    tput = sim.throughput(Allocation(np.array([2, 4], dtype=int)))
+    assert tput == pytest.approx(
+        1.0 / (ser["cost"] * (ser["serial_frac"]
+                              + (1 - ser["serial_frac"]) / 4)), rel=0.35)
