@@ -83,8 +83,8 @@ def make_fleet_coordinator(cluster, *, seed: int = 0, head: str = "factored",
 
 
 def make_tuner(spec, machine, *, seed: int = 0, head: str = "factored",
-               finetune_ticks: int = 250) -> InTune:
+               finetune_ticks: int = 250, **kw) -> InTune:
     """Benchmark-grade InTune: pretrained (cached) agent for this length."""
     state = get_agent_state(spec.n_stages, head=head)
     return InTune(spec, machine, seed=seed, head=head, pretrained=state,
-                  finetune_ticks=finetune_ticks)
+                  finetune_ticks=finetune_ticks, **kw)

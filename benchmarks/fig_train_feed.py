@@ -1,0 +1,271 @@
+"""The closed-loop headline: tuned proc feed vs baselines on DEVICE IDLE.
+
+The paper's north-star metric is accelerator idle time, not pipeline
+batches/sec (InTune §1; BagPipe). This benchmark runs the full bridge —
+real featurization stages (data/featurize.py) in a ProcessPipeline,
+batches crossing into jax through `device_feed.make_train_feed`, a real
+(small) DLRM train step consuming them — three times, identical except
+for who places the workers:
+
+  intune      `common.make_tuner` (pretrained DQN, live fine-tune) driven
+              by `Session.step` between train steps, observing measured
+              `device_idle_frac` telemetry from `FeedBackend`
+  even        `heuristic_even` frozen: n_cpus/n_stages workers per stage.
+              On a host smaller than the declared machine this OVERPLACES
+              — every extra worker multiplies the Amdahl coordination
+              penalty (cost * (a*s + 1-s)) and steals real silicon from
+              the trainer, so the feed falls behind and the device starves
+  static_best 1 worker/stage frozen — the small-host oracle placement,
+              the floor the tuner should approach
+
+Scored on the measured tail-window device-idle fraction and step time;
+emits machine-readable BENCH_train_feed.json with
+`idle_reduction_vs_even` (acceptance bar: >= 0.20).
+
+    PYTHONPATH=src python benchmarks/fig_train_feed.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.api import FeedBackend, FrozenPolicy, Session
+from repro.configs.base import DLRMConfig
+from repro.core.baselines import heuristic_even
+from repro.data.device_feed import make_train_feed
+from repro.data.featurize import (RecordSpec, featurize_block,
+                                  featurize_stage_fns, raw_block)
+from repro.data.pipeline import train_feed_pipeline
+from repro.data.proc_executor import ProcessPipeline
+from repro.data.simulator import Allocation, MachineSpec
+
+
+def build_model(batch: int):
+    """Small DLRM (fast step => many tuning ticks per wall minute); the
+    100M-param version of the same loop is examples/train_dlrm_criteo."""
+    import jax
+    from repro.models import dlrm as dlrm_lib
+    from repro.train.optim import make_optimizer
+    from repro.train.train_step import make_train_step
+
+    # ~10M params: big enough that the device step takes O(100ms) on a
+    # small host, so the feed pipeline's designed stage costs (0.8x the
+    # step, split across stages) sit ABOVE the CPU-clock tick guard and
+    # worker contention is physical, not IPC noise
+    n_sparse, rows = 8, 1 << 14
+    cfg = DLRMConfig(name="dlrm-feed-demo", n_sparse=n_sparse, n_dense=13,
+                     embed_dim=64, vocab_sizes=(rows,) * n_sparse,
+                     bottom_mlp=(128, 64), top_mlp=(256, 128, 1))
+    params, _ = dlrm_lib.init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", lr=0.02)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: dlrm_lib.loss_fn(p, cfg, b), opt))
+    return cfg, params, opt_state, step_fn
+
+
+def measure_step_time(step_fn, params, opt_state, rec, iters: int = 10):
+    import jax
+    import jax.numpy as jnp
+    warm = {k: jnp.asarray(v) for k, v in featurize_block(
+        raw_block(np.random.RandomState(0), rec), rec).items()}
+    params, opt_state, _ = step_fn(params, opt_state, 0, warm)  # compile
+    jax.block_until_ready(params)
+    t0 = time.monotonic()
+    for k in range(iters):
+        params, opt_state, _ = step_fn(params, opt_state, k, warm)
+    jax.block_until_ready(params)
+    return (time.monotonic() - t0) / iters
+
+
+def run_arm(name, make_opt, *, step_fn, params, opt_state, rec, spec,
+            machine, steps: int, tune_every: int, step_time: float,
+            warm_steps: int = 16):
+    """One closed-loop run: fresh pipeline + feed + backend + session;
+    the optimizer is the only difference between arms."""
+    import jax
+
+    pipe = ProcessPipeline(spec, fns=featurize_stage_fns(spec, record=rec),
+                           machine=machine, pin_cpus=1)
+    optimizer = make_opt(spec, machine)
+    init = optimizer.propose(spec, machine, None)
+    pipe.set_allocation(list(init.workers), init.prefetch_mb)
+    feed = make_train_feed(pipe, depth=2,
+                           timeout=max(120.0, 200.0 * step_time))
+    # device_step_s: on a shared-core host the feed steals silicon from
+    # the trainer instead of letting it block, so idle is scored as
+    # 1 - device_busy/wall against the uncontended step time
+    backend = FeedBackend(pipe, feed, device_step_s=step_time)
+    session = Session(backend, optimizer)
+    idles, stimes, workers = [], [], []
+    settle = 0              # windows discarded since the last move
+    try:
+        for i in range(steps):
+            batch = next(feed)
+            params, opt_state, _ = step_fn(params, opt_state, i, batch)
+            if (i + 1) % tune_every == 0:
+                jax.block_until_ready(params)   # close the step window
+                if i < warm_steps:
+                    # cold pipeline: queues are filling and workers are
+                    # self-calibrating, so the first windows read idle
+                    # ~0.9 at ANY allocation. Feeding them to the tuner
+                    # would poison best-tracking (the launch allocation
+                    # is only ever visited cold, so a warm-but-bad
+                    # allocation outscores it). Discard the measurement
+                    # without observing or moving.
+                    backend.measure()
+                    continue
+                if settle:
+                    # the window that just closed measured the
+                    # TRANSITION into the last-applied allocation —
+                    # tearing down / spawning worker processes can
+                    # starve the feed for a full window at ANY target
+                    # allocation. Charging it to the new allocation
+                    # career-kills good placements (the serving switch
+                    # back to the incumbent reads idle=1.0 and halves
+                    # its mean). Worse, a big resize-DOWN floods the
+                    # host with the retiring workers' exit flushes and
+                    # the pipe can deliver NOTHING for several windows;
+                    # keep discarding while production is zero (capped,
+                    # so a genuinely dead allocation still gets
+                    # charged). The first producing window measures the
+                    # allocation itself, warmed.
+                    m = backend.measure()
+                    settle = settle + 1 \
+                        if (settle < 4 and m.extras.get("produced", 1) <= 0) \
+                        else 0
+                    continue
+                before = (list(pipe.worker_counts()), pipe.prefetch_mb)
+                tel = session.step()
+                settle = int((list(pipe.worker_counts()),
+                              pipe.prefetch_mb) != before)
+                if tel.step_time_s is not None:
+                    idles.append(float(tel.device_idle_frac))
+                    stimes.append(float(tel.step_time_s))
+                    workers.append(list(pipe.worker_counts()))
+    finally:
+        acct = session.close()
+    # tail window: the tuner's serving phase (post fine-tune), and for
+    # the frozen arms just their (stationary) tail
+    tail = max(1, len(idles) // 3)
+    row = {
+        "arm": name,
+        "idle_frac": float(np.mean(idles[-tail:])),
+        "step_time_s": float(np.mean(stimes[-tail:])),
+        "idle_series": [round(x, 4) for x in idles],
+        "workers_final": workers[-1] if workers else None,
+        "ticks": len(idles),
+        "teardown": acct,
+    }
+    print(f"  {name:12s} idle={row['idle_frac']:.3f} "
+          f"step={row['step_time_s']*1e3:.0f}ms "
+          f"workers={row['workers_final']}")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run for CI: fewer steps, same plumbing")
+    # long enough that the serving tail outlives the exploration
+    # phase's retired-worker decay (a retiring worker whose exit flush
+    # is parked behind a full steady-state queue drains off at roughly
+    # one per consumed item — see proc_executor._worker_main)
+    ap.add_argument("--steps", type=int, default=320)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--tune-every", type=int, default=2)
+    args = ap.parse_args(argv)
+    steps = 80 if args.smoke else args.steps
+    # the tuner only observes post-warmup ticks (run_arm discards the
+    # first warm_steps train steps' measurements), and every exploration
+    # MOVE costs two windows (one discarded settle window + one
+    # observed), so the fine-tune / serve split is budgeted from the
+    # post-warmup WINDOW count: 2*finetune exploration windows, the
+    # rest steady serving — which keeps the scored tail inside the
+    # serving phase
+    warm_steps = 16
+    post_warm = max(1, (steps - warm_steps) // args.tune_every)
+    # cap: ~20 moves cover the 5-stage walk several times over, and
+    # every extra move is process churn — long runs spend the surplus
+    # in the serving phase instead, where the scored tail lives
+    finetune = max(10, min(post_warm * 2 // 5, 20))
+
+    cfg, params, opt_state, step_fn = build_model(args.batch)
+    rec = RecordSpec(batch=args.batch, n_sparse=cfg.n_sparse,
+                     n_dense=cfg.n_dense, vocab=cfg.vocab_sizes[0])
+    step_time = measure_step_time(step_fn, params, opt_state, rec)
+    print(f"device step time: {step_time*1e3:.1f} ms "
+          f"({os.cpu_count()} host cores)")
+
+    spec = train_feed_pipeline(step_time_s=step_time, work="real")
+    machine = MachineSpec(n_cpus=30, mem_mb=4096)
+    kw = dict(step_fn=step_fn, params=params, opt_state=opt_state, rec=rec,
+              spec=spec, machine=machine, steps=steps,
+              tune_every=args.tune_every, step_time=step_time,
+              warm_steps=warm_steps)
+
+    arms = {}
+    print(f"running 3 arms x {steps} train steps:")
+    arms["even"] = run_arm(
+        "even", lambda s, m: FrozenPolicy(heuristic_even(s, m)), **kw)
+    arms["static_best"] = run_arm(
+        "static_best",
+        lambda s, m: FrozenPolicy(
+            Allocation(np.ones(s.n_stages, dtype=int), 2.0 * s.batch_mb)),
+        **kw)
+    arms["intune"] = run_arm(
+        "intune",
+        # cold-start at the conservative launch placement (1 worker per
+        # stage, what a real pipeline boots with) and scale up only
+        # where the measured feed reward justifies it. Starting the
+        # exploration walk at heuristic_even would have the tuner spend
+        # the whole window walking DOWN out of the even arm's basin
+        lambda s, m: common.make_tuner(
+            s, m, seed=0, finetune_ticks=finetune,
+            init_alloc=Allocation(np.ones(s.n_stages, dtype=int),
+                                  2.0 * s.batch_mb),
+            # the pretrained Q-net learned "grow workers" on a dedicated
+            # sim machine; at the feed boundary that bias points the
+            # wrong way, so restart the walk from the incumbent best
+            # often enough that greedy drift cannot carry it far
+            explore_restart_every=12,
+            # live windows are a couple of train steps of noisy wall
+            # clock: penalize one-off lucky readings and demand a clear
+            # margin before the serving choice flips
+            lcb_coef=0.15, switch_margin=0.05), **kw)
+
+    even, tuned = arms["even"], arms["intune"]
+    idle_red = (even["idle_frac"] - tuned["idle_frac"]) \
+        / max(even["idle_frac"], 1e-9)
+    step_red = (even["step_time_s"] - tuned["step_time_s"]) \
+        / max(even["step_time_s"], 1e-9)
+    payload = {
+        "host_cpus": os.cpu_count(),
+        "batch": args.batch,
+        "steps": steps,
+        "tune_every": args.tune_every,
+        "smoke": bool(args.smoke),
+        "device_step_time_s": step_time,
+        "arms": arms,
+        "idle_reduction_vs_even": idle_red,
+        "step_time_reduction_vs_even": step_red,
+        # the >=20% bar is scored on the full run; --smoke runs too few
+        # ticks for the tuner to finish fine-tuning and only reports
+        "pass_20pct_bar": bool(idle_red >= 0.20),
+    }
+    common.save_json("BENCH_train_feed.json", payload)
+    bar = "report-only (smoke)" if args.smoke else \
+        ("PASS" if idle_red >= 0.20 else "FAIL")
+    print(f"idle reduction vs even: {idle_red:+.1%} "
+          f"(bar >= +20.0%: {bar}); "
+          f"step-time reduction: {step_red:+.1%}")
+    print(f"wrote {os.path.join(common.OUT_DIR, 'BENCH_train_feed.json')}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,28 @@
 """End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
-on the synthetic Criteo stream, with checkpoint/restart and the InTune
-controller tuning the (simulated-machine) ingestion pipeline alongside.
+on synthetic Criteo data, with checkpoint/restart and the InTune
+controller tuning ingestion alongside.
 
     PYTHONPATH=src python examples/train_dlrm_criteo.py [--steps 300]
 
-~100M params: 8 tables x 2^16 rows x 64-dim = 33.5M embedding + MLPs, plus
+Two backends:
+
+  --backend proc (default)  THE CLOSED LOOP. A real ProcessPipeline runs
+      the featurization stages (hashing / pooling / padding / collation,
+      data/featurize.py) in worker processes; batches cross into jax
+      through `device_feed.make_train_feed` (device_prefetch + stall
+      metering); the InTune controller tunes THIS pipeline — the one the
+      train step actually eats from — via `FeedBackend` + `Session.step`,
+      observing measured `device_idle_frac` at the feed boundary.
+
+  --backend sim  the legacy mode, kept for hosts where forking worker
+      processes is unwanted. NOTE: in this mode the controller tunes a
+      SIMULATED MachineSpec(n_cpus=128) pipeline that is completely
+      DETACHED from the data actually fed to the model (batches are
+      synthesized inline by CriteoStream); tuner output never changes
+      what the train loop sees. It demonstrates the controller loop, not
+      a closed tuning loop — use the default proc backend for that.
+
+~100M params: 12 tables x 2^16 rows x 96-dim = 75.5M embedding, plus
 bottom/top MLPs (kept modest so the CPU run finishes in minutes). The
 production-size config is `--arch dlrm-criteo` in the dry-run.
 """
@@ -18,8 +36,8 @@ import numpy as np
 
 from repro.configs.base import DLRMConfig
 from repro.core.controller import InTune
-from repro.data.pipeline import criteo_pipeline
-from repro.data.simulator import MachineSpec
+from repro.data.pipeline import criteo_pipeline, train_feed_pipeline
+from repro.data.simulator import Allocation, MachineSpec
 from repro.data.synthetic import CriteoStream
 from repro.models import dlrm as dlrm_lib
 from repro.train import checkpoint as ckpt
@@ -27,37 +45,27 @@ from repro.train.optim import make_optimizer
 from repro.train.train_step import make_train_step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch", type=int, default=2048)
-    ap.add_argument("--ckpt-every", type=int, default=100)
-    ap.add_argument("--ckpt-dir", default="experiments/ckpt_dlrm")
-    args = ap.parse_args(argv)
-
+def build_model(batch: int):
     n_sparse, n_dense, rows, dim = 12, 13, 1 << 16, 96
     cfg = DLRMConfig(
         name="dlrm-100m", n_sparse=n_sparse, n_dense=n_dense,
         embed_dim=dim, vocab_sizes=(rows,) * n_sparse,
         bottom_mlp=(512, 256, 96), top_mlp=(1024, 512, 256, 1))
-    stream = CriteoStream(n_sparse=n_sparse, n_dense=n_dense, vocab=rows)
-
     params, _ = dlrm_lib.init_params(jax.random.PRNGKey(0), cfg)
     n_params = sum(int(np.prod(p.shape))
                    for p in jax.tree_util.tree_leaves(params))
     print(f"model: {n_params/1e6:.1f}M params")
     opt = make_optimizer("adagrad", lr=0.02)
-    opt_state = opt.init(params)
     step_fn = jax.jit(make_train_step(
         lambda p, b: dlrm_lib.loss_fn(p, cfg, b), opt))
+    return cfg, params, opt, step_fn
 
-    # resume if a checkpoint exists
+
+def restore_or_init(ckpt_dir, params, opt_state, tuner):
     start = 0
-    tuner = InTune(criteo_pipeline(), MachineSpec(n_cpus=128), seed=0,
-                   head="factored", finetune_ticks=150)
-    last = ckpt.latest_step(args.ckpt_dir)
+    last = ckpt.latest_step(ckpt_dir)
     if last is not None:
-        tree, manifest = ckpt.restore(args.ckpt_dir)
+        tree, manifest = ckpt.restore(ckpt_dir)
         params, opt_state = tree["params"], tree["opt_state"]
         start = manifest["step"] + 1
         if "intune" in manifest["extras"]:
@@ -68,35 +76,166 @@ def main(argv=None):
                 "workers": ex["workers"],
                 "prefetch_mb": ex["prefetch_mb"]})
         print(f"resumed from step {start - 1}")
+    return start, params, opt_state
 
+
+def save_step(ckpt_dir, i, params, opt_state, tuner):
+    st = tuner.state_dict()
+    ckpt.save(ckpt_dir, i,
+              {"params": params, "opt_state": opt_state,
+               "intune_qnet": st["agent"]["qnet"]},
+              extras={"intune": {
+                  "workers": st["workers"],
+                  "prefetch_mb": st["prefetch_mb"],
+                  "agent_steps": st["agent"]["steps"]}})
+
+
+def run_proc(args):
+    """The closed loop: tuned ProcessPipeline feeds the real train step."""
+    from repro.api import FeedBackend, Session
+    from repro.data.device_feed import make_train_feed
+    from repro.data.featurize import (RecordSpec, featurize_block,
+                                      featurize_stage_fns, raw_block)
+
+    cfg, params, opt, step_fn = build_model(args.batch)
+    opt_state = opt.init(params)
+    rec = RecordSpec(batch=args.batch, n_sparse=cfg.n_sparse,
+                     n_dense=cfg.n_dense, vocab=cfg.vocab_sizes[0])
+
+    # warm up the jit + measure the raw device step time: the pipeline's
+    # CPU budget (train_feed_pipeline cpu_share) is set relative to THIS,
+    # so ingestion can keep up at a sane allocation but not at a bad one
+    warm = {k: jnp.asarray(v) for k, v in featurize_block(
+        raw_block(np.random.RandomState(0), rec), rec).items()}
+    params, opt_state, _ = step_fn(params, opt_state, 0, warm)
+    t0 = time.monotonic()
+    for k in range(3):
+        params, opt_state, _ = step_fn(params, opt_state, k, warm)
+    jax.block_until_ready(params)
+    step_time = (time.monotonic() - t0) / 3
+    print(f"measured device step time: {step_time*1e3:.0f} ms")
+
+    from repro.data.proc_executor import ProcessPipeline
+    spec = train_feed_pipeline(step_time_s=step_time, work="real")
+    # n_cpus=12 bounds how far the tuner's exploration can over-place
+    # workers: on a small host, every extra worker steals silicon from
+    # the trainer itself, so a huge fake machine makes the warmup phase
+    # painfully slow before the agent learns to back off
+    machine = MachineSpec(n_cpus=12, mem_mb=4096)
+    # pin_cpus=1 leaves the host's remaining cores (if any) to the
+    # trainer process; the tuner's CPU headroom is contention-real
+    pipe = ProcessPipeline(spec, fns=featurize_stage_fns(spec, record=rec),
+                           machine=machine, pin_cpus=1)
+    pipe.set_allocation([1] * len(spec.stages), prefetch_mb=32.0)
+    # timeout: a cold pipeline must push one batch through every stage
+    # serially before anything reaches the sink
+    feed = make_train_feed(pipe, depth=2,
+                           timeout=max(120.0, 60.0 * step_time))
+    # device_step_s: on a shared-core host ingestion steals silicon from
+    # the trainer instead of letting it block, so device_idle_frac is
+    # scored as 1 - device_busy/wall against the uncontended step time
+    backend = FeedBackend(pipe, feed, device_step_s=step_time)
+    # init_alloc: start the exploration walk where the pipe actually
+    # launched (minimal workers), not at heuristic_even — at a feed
+    # boundary the reward is device business, and over-placed workers
+    # steal the trainer's own cores
+    tuner = InTune(spec, machine, seed=0, head="factored",
+                   finetune_ticks=args.finetune_ticks,
+                   init_alloc=Allocation(
+                       np.ones(len(spec.stages), dtype=int),
+                       prefetch_mb=32.0),
+                   # live windows are noisy: visit-penalized incumbent
+                   # tracking + switch hysteresis (see fig_train_feed)
+                   lcb_coef=0.15, switch_margin=0.05)
+    session = Session(backend, tuner)
+
+    start, params, opt_state = restore_or_init(
+        args.ckpt_dir, params, opt_state, tuner)
+    t0 = time.time()
+    losses, idle = [], None
+    try:
+        for i in range(start, args.steps):
+            batch = next(feed)
+            params, opt_state, metrics = step_fn(params, opt_state, i, batch)
+            losses.append(float(metrics["loss"]))
+            if i % args.tune_every == 0:
+                jax.block_until_ready(params)  # close the step window
+                tel = session.step()
+                idle = tel.device_idle_frac
+            if i % 25 == 0:
+                rate = (i - start + 1) * args.batch / (time.time() - t0)
+                print(f"step {i:4d} loss {losses[-1]:.4f} "
+                      f"({rate:,.0f} samples/s) device_idle "
+                      f"{idle if idle is None else round(idle, 3)} "
+                      f"workers {pipe.worker_counts()}")
+            if (args.ckpt_every and (i + 1) % args.ckpt_every == 0) \
+                or i == args.steps - 1:
+                save_step(args.ckpt_dir, i, params, opt_state, tuner)
+    finally:
+        acct = session.close()
+        print(f"feed teardown: {acct}")
+    print(f"final loss {np.mean(losses[-20:]):.4f} "
+          f"(first-20 {np.mean(losses[:20]):.4f}); "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+def run_sim(args):
+    """Legacy mode: the tuner tunes a SIMULATED 128-CPU machine; the
+    batches fed to the model come from an inline CriteoStream and are
+    unaffected by anything the tuner decides."""
+    cfg, params, opt, step_fn = build_model(args.batch)
+    opt_state = opt.init(params)
+    stream = CriteoStream(n_sparse=cfg.n_sparse, n_dense=cfg.n_dense,
+                          vocab=cfg.vocab_sizes[0])
+    tuner = InTune(criteo_pipeline(), MachineSpec(n_cpus=128), seed=0,
+                   head="factored", finetune_ticks=150)
+    start, params, opt_state = restore_or_init(
+        args.ckpt_dir, params, opt_state, tuner)
     t0 = time.time()
     losses = []
     for i in range(start, args.steps):
         batch = stream.feature_udf(stream.raw_block(args.batch))
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, metrics = step_fn(params, opt_state, i, batch)
-        # pipeline tuning advances in lockstep with training steps (the
-        # decoupled form is Session(ControllerBackend(tuner)).run(...)
-        # in a background thread — see examples/quickstart.py part 3)
+        # simulated-pipeline tuning in lockstep with training steps; the
+        # closed-loop form is `--backend proc` (FeedBackend + Session.step)
         tuner.tick()
         losses.append(float(metrics["loss"]))
         if i % 25 == 0:
             rate = (i - start + 1) * args.batch / (time.time() - t0)
             print(f"step {i:4d} loss {losses[-1]:.4f} "
-                  f"({rate:,.0f} samples/s) pipeline "
+                  f"({rate:,.0f} samples/s) sim pipeline "
                   f"{tuner.history[-1]['throughput']:.1f} b/s")
-        if (i + 1) % args.ckpt_every == 0 or i == args.steps - 1:
-            st = tuner.state_dict()
-            ckpt.save(args.ckpt_dir, i,
-                      {"params": params, "opt_state": opt_state,
-                       "intune_qnet": st["agent"]["qnet"]},
-                      extras={"intune": {
-                          "workers": st["workers"],
-                          "prefetch_mb": st["prefetch_mb"],
-                          "agent_steps": st["agent"]["steps"]}})
+        if (args.ckpt_every and (i + 1) % args.ckpt_every == 0) \
+            or i == args.steps - 1:
+            save_step(args.ckpt_dir, i, params, opt_state, tuner)
     print(f"final loss {np.mean(losses[-20:]):.4f} "
           f"(first-20 {np.mean(losses[:20]):.4f}); "
           f"checkpoints in {args.ckpt_dir}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--backend", choices=("proc", "sim"), default="proc",
+                    help="proc = tuned ProcessPipeline actually feeds the "
+                         "train step (closed loop); sim = tuner runs "
+                         "against a simulated machine DETACHED from the "
+                         "inline data the model trains on")
+    ap.add_argument("--tune-every", type=int, default=2,
+                    help="proc backend: train steps per tuning tick")
+    ap.add_argument("--finetune-ticks", type=int, default=90,
+                    help="proc backend: InTune exploration budget before "
+                         "it serves its incumbent best allocation")
+    ap.add_argument("--ckpt-every", type=int, default=100,
+                    help="checkpoint cadence in steps; 0 = final step only")
+    ap.add_argument("--ckpt-dir", default="experiments/ckpt_dlrm")
+    args = ap.parse_args(argv)
+    if args.backend == "proc":
+        run_proc(args)
+    else:
+        run_sim(args)
 
 
 if __name__ == "__main__":

@@ -9,9 +9,9 @@ package speaks a substrate dialect directly.
 """
 from repro.api.backend import Backend, BackendBase, UnsupportedEventError
 from repro.api.backends import (ControllerBackend, DialectBackend,
-                                ExecutorBackend, FleetSimBackend,
-                                LiveFleetBackend, ProcessBackend,
-                                SimBackend, as_backend)
+                                ExecutorBackend, FeedBackend,
+                                FleetSimBackend, LiveFleetBackend,
+                                ProcessBackend, SimBackend, as_backend)
 from repro.api.constants import OOM_RESTART_TICKS, RELAUNCH_TICKS
 from repro.api.events import (ChurnEvent, DeadWindow, Event, ResizeEvent,
                               churn_events, resize_events)
@@ -24,8 +24,8 @@ from repro.api.validation import (AllocationError, validate_allocation,
 __all__ = [
     "Backend", "BackendBase", "UnsupportedEventError",
     "ControllerBackend", "DialectBackend", "ExecutorBackend",
-    "FleetSimBackend", "LiveFleetBackend", "ProcessBackend", "SimBackend",
-    "as_backend",
+    "FeedBackend", "FleetSimBackend", "LiveFleetBackend", "ProcessBackend",
+    "SimBackend", "as_backend",
     "OOM_RESTART_TICKS", "RELAUNCH_TICKS",
     "ChurnEvent", "DeadWindow", "Event", "ResizeEvent",
     "churn_events", "resize_events",

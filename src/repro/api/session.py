@@ -127,6 +127,39 @@ class Session:
             res.extras["optimizer"] = self.optimizer
         return res
 
+    # ------------------------------------------------------ train-driven --
+    def step(self) -> Telemetry:
+        """One tuning tick driven by an EXTERNAL clock (a train loop):
+        measure the window that just ran, let the optimizer observe it,
+        then propose + apply the next allocation.
+
+        The ordering matters for learning optimizers: `observe` must see
+        the telemetry produced UNDER the previously-applied allocation
+        (its pending action), and the new proposal is applied before the
+        caller runs the next batch of train steps — so every (action,
+        outcome) pair the agent learns from is causally aligned. Call
+        between train steps:
+
+            for step in range(n_steps):
+                batch = next(feed)
+                state = train_step(state, batch)
+                if step % tune_every == 0:
+                    tel = session.step()   # tune against measured idle
+
+        Backends without a `measure()` method (everything but
+        FeedBackend) fall back to `apply(None)` for the measurement,
+        which analytic/self-driving backends treat as a plain tick.
+        """
+        measure = getattr(self.backend, "measure", None)
+        tel = measure() if callable(measure) \
+            else self.backend.apply(None)
+        if self.optimizer is not None:
+            self.optimizer.observe(tel)
+            alloc = self.optimizer.propose(self.spec, self.backend.machine,
+                                           self.backend.stats())
+            self.backend.apply(alloc)
+        return tel
+
     # --------------------------------------------------------- lifecycle --
     def close(self) -> dict:
         return self.backend.shutdown()

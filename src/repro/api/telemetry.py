@@ -14,9 +14,15 @@ types.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List
+from typing import Any, Dict, Iterator, List, Optional
 
 _CORE = ("throughput", "mem_mb", "used_cpus", "oom", "restarting")
+
+# Feed-boundary fields (ISSUE 6): reported only by backends that sit at
+# a host->device feed (FeedBackend). None means "this backend has no
+# feed boundary" and the field is omitted from the mapping dialect, so
+# dict-shaped consumers of sim/executor telemetry see no new keys.
+_FEED = ("device_idle_frac", "step_time_s", "feed_stall_s")
 
 
 class _DictCompat:
@@ -69,6 +75,15 @@ class Telemetry(_DictCompat):
     oom         this tick crossed the memory line (process killed)
     restarting  the pipeline is inside a dead/restart window
     extras      backend-specific breakdowns (per_trainer, pool, reward...)
+
+    Feed-boundary fields (None unless the backend sits at a host->device
+    feed — see api/backends.FeedBackend and data/device_feed.MeteredFeed):
+
+    device_idle_frac  fraction of the window's wall time the consumer
+                      spent blocked waiting on `next(feed)` — the
+                      paper's headline metric (accelerator starvation)
+    step_time_s       mean wall seconds per train step over the window
+    feed_stall_s      total blocked-on-feed seconds over the window
     """
     throughput: float = 0.0
     mem_mb: float = 0.0
@@ -76,21 +91,42 @@ class Telemetry(_DictCompat):
     oom: bool = False
     restarting: bool = False
     extras: Dict[str, Any] = field(default_factory=dict)
+    device_idle_frac: Optional[float] = None
+    step_time_s: Optional[float] = None
+    feed_stall_s: Optional[float] = None
 
-    _FIELDS = _CORE
+    # Positional construction (`Telemetry(tput, rss, used, False, False,
+    # extras)`) is load-bearing across backends and tests, so the feed
+    # fields live AFTER extras. The mapping dialect hides them when None.
+    _FIELDS = _CORE + _FEED
+
+    def keys(self):
+        return ([k for k in self._FIELDS
+                 if k not in _FEED or getattr(self, k) is not None]
+                + list(self.extras))
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {k: getattr(self, k) for k in self._FIELDS
+             if k not in _FEED or getattr(self, k) is not None}
+        d.update(self.extras)
+        return d
 
     @classmethod
     def from_metrics(cls, metrics: Dict[str, Any]) -> "Telemetry":
         """Lift a dialect metrics dict; unknown keys land in extras."""
         if isinstance(metrics, Telemetry):
             return metrics
-        extras = {k: v for k, v in metrics.items() if k not in _CORE}
+        extras = {k: v for k, v in metrics.items()
+                  if k not in _CORE and k not in _FEED}
         return cls(throughput=metrics.get("throughput", 0.0),
                    mem_mb=metrics.get("mem_mb", 0.0),
                    used_cpus=metrics.get("used_cpus", 0),
                    oom=bool(metrics.get("oom", False)),
                    restarting=bool(metrics.get("restarting", False)),
-                   extras=extras)
+                   extras=extras,
+                   device_idle_frac=metrics.get("device_idle_frac"),
+                   step_time_s=metrics.get("step_time_s"),
+                   feed_stall_s=metrics.get("feed_stall_s"))
 
     @classmethod
     def dead_tick(cls) -> "Telemetry":

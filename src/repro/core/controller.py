@@ -53,9 +53,25 @@ class InTune:
                  finetune_ticks: int = 300,
                  track_best: bool = True,
                  explore_restart_every: int = 25,
-                 finetune_eps: Optional[float] = 0.4):
+                 finetune_eps: Optional[float] = 0.4,
+                 init_alloc: Optional[Allocation] = None,
+                 lcb_coef: float = 0.0,
+                 switch_margin: float = 0.0):
         self.spec = spec
         self.env = PipelineEnv(spec, machine, model_latency, seed=seed)
+        if init_alloc is not None:
+            # where the exploration walk starts. The env defaults to
+            # heuristic_even (use the whole machine) — right for a
+            # dedicated preprocessing host, wrong at a feed boundary on
+            # a shared host, where the conservative launch placement is
+            # minimal workers scaled up only as measurements justify.
+            self.env.set_allocation(init_alloc)
+        # protocol path: hold the FIRST proposal at the launch
+        # allocation so it gets measured before any move — the action
+        # space allows multi-worker jumps, so an immediate move would
+        # leave the launch placement (often the true optimum at a feed
+        # boundary) permanently absent from the incumbent statistics.
+        self._hold_first = init_alloc is not None
         cfg = DQNConfig(obs_dim=self.env.obs_dim, n_stages=spec.n_stages,
                         head=head)
         self.agent = DQNAgent(cfg, seed=seed)
@@ -79,7 +95,24 @@ class InTune:
         # protocol path only: exploration floor inside the tuning window
         # (the schedule's floor applies outside / when None)
         self.finetune_eps = finetune_eps
-        self.best: tuple = (-1.0, None)  # (reward, allocation)
+        self.best: tuple = (-1.0, None)  # (score, allocation)
+        # protocol path only: per-allocation reward statistics. Live
+        # windows are NOISY (a couple of train steps of wall clock), so
+        # the incumbent is the argmax of a visit-count-penalized running
+        # MEAN, not of any single window — one lucky window must not
+        # lock a bad allocation in as the serving choice.
+        self._alloc_stats: dict = {}   # key -> (visits, mean_reward)
+        # how aggressively _track_best distrusts sparsely-visited
+        # allocations (confidence penalty lcb_coef/sqrt(visits)) and how
+        # much better a challenger must score to dethrone the incumbent.
+        # Zero both on a low-noise backend (the simulator): there a
+        # single reading IS the allocation's value and any stickiness
+        # just slows convergence. Raise them on live process backends
+        # where a window is a couple of train steps of noisy wall clock
+        # (benchmarks/fig_train_feed.py uses 0.15 / 0.05 on rewards
+        # in [0, 1]).
+        self.lcb_coef = lcb_coef
+        self.switch_margin = switch_margin
         self.obs = self.env.observe()
         self.history: list[dict] = []
 
@@ -119,6 +152,7 @@ class InTune:
         self.env.resize(n_cpus)
         self.ticks_since_reset = 0
         self.best = (-1.0, None)
+        self._alloc_stats = {}
 
     @property
     def allocation(self) -> Allocation:
@@ -142,13 +176,22 @@ class InTune:
             self.resize(machine.n_cpus)
         if stats is not None:
             self.obs = self._live_obs(stats)
+        if self._hold_first:
+            # measure the launch allocation itself before moving
+            self._hold_first = False
+            self._pending = (self.obs, None)
+            return self.env.alloc
         exploring = self.explore and \
             self.ticks_since_reset < self.finetune_ticks
         if not exploring and self.track_best and self.best[1] is not None:
             # serving mode: hold the incumbent best (stable throughput, the
-            # paper's post-tuning behavior); a resize reopens exploration
+            # paper's post-tuning behavior); a resize reopens exploration.
+            # Still pend the observation (choices=None, no agent update):
+            # serving windows keep refining the incumbent's reward mean,
+            # so an incumbent crowned by a lucky window is dethroned by
+            # its own serving measurements instead of held forever.
             self.env.alloc = self.best[1].copy()
-            self._pending = None
+            self._pending = (self.obs, None)
             return self.env.alloc
         choices = self.agent.act(self.obs, explore=exploring,
                                  eps=self.finetune_eps if exploring
@@ -184,13 +227,24 @@ class InTune:
             mem_frac = min(
                 metrics["mem_mb"] / self.env.sim.machine.mem_mb, 1.0)
             nobs = self.env.observe()
-        reward = (metrics["throughput"] / self.env.reward_scale) \
-            * (1 - mem_frac)
-        self.agent.observe(pobs, choices, reward, nobs, done=False)
+        idle = metrics.get("device_idle_frac") \
+            if hasattr(metrics, "get") else None
+        if idle is not None:
+            # feed-boundary telemetry (FeedBackend): the objective IS
+            # keeping the device busy. Pipe throughput would be the
+            # WRONG reward here — on a shared host more pipeline
+            # workers raise pipe throughput by stealing the trainer's
+            # cores, which is exactly what device_idle_frac charges for.
+            reward = (1.0 - idle) * (1 - mem_frac)
+        else:
+            reward = (metrics["throughput"] / self.env.reward_scale) \
+                * (1 - mem_frac)
+        if choices is not None:
+            self.agent.observe(pobs, choices, reward, nobs, done=False)
         self.obs = nobs
         self.ticks_since_reset += 1
-        if self.track_best and reward > self.best[0]:
-            self.best = (reward, self.env.alloc.copy())
+        if self.track_best:
+            self._track_best(reward)
         # record the allocation that actually produced this tick's metrics,
         # before any snap below replaces it
         rec = dict(metrics)
@@ -213,6 +267,49 @@ class InTune:
                 # allocation. In live mode the next propose(stats=...)
                 # supplies the real observation — never fabricate one.
                 self.obs = self.env.observe()
+
+    def _track_best(self, reward: float) -> None:
+        """Update the incumbent from a measured window (protocol path).
+
+        Each allocation's reward estimate is a running mean over its
+        visits, scored with a 1/sqrt(visits) confidence penalty. The
+        exploration walk restarts from the incumbent, so good basins
+        accumulate visits and shed their penalty while a one-off lucky
+        window keeps most of its discount — the single-max rule this
+        replaces let such windows permanently capture the serving slot.
+        (The legacy tick() path keeps single-max: its analytic simulator
+        is deterministic, so windows are noise-free there.)
+        """
+        key = (tuple(int(w) for w in self.env.alloc.workers),
+               float(self.env.alloc.prefetch_mb))
+        n, mu = self._alloc_stats.get(key, (0, 0.0))
+        n += 1
+        mu += (reward - mu) / n
+        self._alloc_stats[key] = (n, mu)
+
+        def score(vn, vmu):
+            return vmu - self.lcb_coef / np.sqrt(vn)
+
+        if self.best[1] is not None:
+            # refresh the incumbent's score from its own latest stats —
+            # serving windows re-measure it, so a lucky crowning decays
+            # toward the allocation's true mean
+            bkey = (tuple(int(w) for w in self.best[1].workers),
+                    float(self.best[1].prefetch_mb))
+            if bkey in self._alloc_stats:
+                bn, bmu = self._alloc_stats[bkey]
+                self.best = (score(bn, bmu), self.best[1])
+        ckey, (cn, cmu) = max(
+            self._alloc_stats.items(),
+            key=lambda kv: score(kv[1][0], kv[1][1]))
+        # hysteresis: dethroning costs a live worker-pool resize whose
+        # first window reads artificially bad, so near-ties must not
+        # flip the serving choice back and forth — a challenger needs a
+        # clear margin, not a coin-toss win
+        if self.best[1] is None \
+                or score(cn, cmu) > self.best[0] + self.switch_margin:
+            self.best = (score(cn, cmu),
+                         Allocation(np.array(ckey[0], dtype=int), ckey[1]))
 
     # ----------------------------------------------------- live executor --
     def attach(self, executor, interval_s: float = 1.0):

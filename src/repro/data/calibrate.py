@@ -108,23 +108,34 @@ def _standalone_graph(st: StageSpec, batch_mb: float) -> StageGraph:
 def measure_stage_curve(st: StageSpec, workers: Sequence[int], *,
                         window_s: float = 1.2, warmup_s: float = 0.5,
                         ballast: bool = False, machine=None,
-                        ) -> Dict[str, List]:
+                        work: str = "spin") -> Dict[str, List]:
     """Measured service curve of one stage, standalone.
 
-    Runs the stage's SpinWork as a single-stage ProcessPipeline and, for
+    Runs the stage's work fn as a single-stage ProcessPipeline and, for
     each pool size in `workers`, reads the delivered-counter delta over
     `window_s` plus the pool's CPU-clock delta. Returns
     {"workers", "rate", "occupancy", "percpu"}; `percpu` is the
     measured CPU-seconds consumed per delivered item (None when the
     host exposes no per-process CPU clock), and `rate` is the raw wall
     window rate. The fit should consume `corrected_rates(curve)`.
+
+    `work` picks the unit under measurement: `"spin"` = SpinWork burns,
+    `"real"` = the actual featurization transforms (data/featurize.py,
+    run standalone with a cached self-generated input so upstream
+    transform cost never leaks into this stage's curve). Both realize
+    the same clock-disciplined Amdahl contract, so the CPU-normalized
+    fit recovers cost/serial_frac from either.
     """
     if machine is None:
         machine = MachineSpec(n_cpus=max(workers), mem_mb=1 << 20)
     spec = _standalone_graph(st, batch_mb=1.0)
-    fn = SpinWork(st.cost, st.serial_frac,
-                  ballast_mb=st.mem_per_worker_mb if ballast else 0.0,
-                  kind="source")
+    if work == "real":
+        from repro.data.featurize import featurize_work_for
+        fn = featurize_work_for(st, ballast=ballast, kind="source")
+    else:
+        fn = SpinWork(st.cost, st.serial_frac,
+                      ballast_mb=st.mem_per_worker_mb if ballast else 0.0,
+                      kind="source")
     pipe = ProcessPipeline(spec, fns={spec.stages[0].name: fn},
                            queue_depth=8, item_mb=1.0, machine=machine)
     # open the prefetch gate far beyond what a window can deliver: the
@@ -217,9 +228,10 @@ def calibrate_stagegraph(spec: StageGraph, *,
     sweep = tuple(workers) if workers is not None else default_sweep()
     report: Dict[str, dict] = {}
     stages = []
+    work = getattr(spec, "work", "spin")
     for st in spec.stages:
         curve = measure_stage_curve(st, sweep, window_s=window_s,
-                                    warmup_s=warmup_s)
+                                    warmup_s=warmup_s, work=work)
         corrected = corrected_rates(curve)
         cost, serial = fit_amdahl(curve["workers"], corrected)
         report[st.name] = dict(curve, corrected=corrected, cost=cost,

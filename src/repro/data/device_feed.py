@@ -8,7 +8,8 @@ feeds only its shard of the global batch (`shard_slice`). This is the
 from __future__ import annotations
 
 import collections
-from typing import Callable, Iterator, Optional
+import time
+from typing import Callable, Dict, Iterator, Optional
 
 import jax
 import numpy as np
@@ -36,6 +37,61 @@ def device_prefetch(it: Iterator, depth: int = 2, sharding=None):
         except StopIteration:
             pass
         yield out
+
+
+class MeteredFeed:
+    """Iterator wrapper that times how long the consumer blocks in
+    `next()` — the host->device boundary where accelerator idle is born.
+
+    Clock discipline: the stall clock runs ONLY inside `__next__`, on
+    `time.monotonic`. Everything outside — the jitted train step, the
+    optimizer tick, checkpointing — is by definition device/driver time
+    and never pollutes the stall number. Because `device_prefetch` keeps
+    `depth` batches in flight, a stall here means the pipeline fell
+    behind by more than the prefetch buffer: exactly the starvation the
+    paper's device-idle metric charges to ingestion.
+
+    `counters()` returns monotonically increasing totals
+    (`batches`, `stall_s`, plus a `time` timestamp); consumers
+    (FeedBackend.measure) difference two snapshots to get a window.
+    """
+
+    def __init__(self, it: Iterator):
+        self._it = it
+        self.batches = 0
+        self.stall_s = 0.0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        t0 = time.monotonic()
+        try:
+            out = next(self._it)
+        finally:
+            self.stall_s += time.monotonic() - t0
+        self.batches += 1
+        return out
+
+    def counters(self) -> Dict[str, float]:
+        return {"batches": float(self.batches),
+                "stall_s": float(self.stall_s),
+                "time": time.monotonic()}
+
+
+def make_train_feed(pipe, *, depth: int = 2, sharding=None,
+                    timeout: float = 60.0) -> MeteredFeed:
+    """The proc->device bridge: compose `pipe.get_batch()` (model-ready
+    numpy batches out of the tuned ProcessPipeline) through
+    `device_prefetch` (depth batches resident on device, transfer
+    overlapped with compute) into a `MeteredFeed` (stall accounting at
+    the boundary). The returned iterator is what the train loop consumes
+    and what FeedBackend meters."""
+    def batches():
+        while True:
+            yield pipe.get_batch(timeout=timeout)
+    return MeteredFeed(device_prefetch(batches(), depth=depth,
+                                       sharding=sharding))
 
 
 def shard_slice(batch: dict, host_id: int, n_hosts: int) -> dict:

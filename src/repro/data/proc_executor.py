@@ -190,7 +190,8 @@ _TICK_GUARD = 0.02
 _burn_debt = 0.0
 
 
-def _burn(cpu_s: float):
+def _burn(cpu_s: float, quantum: Optional[Callable] = None,
+          qrate: Optional[float] = None):
     """Burn `cpu_s` seconds of CPU *work*, not wall time: under core
     contention the wall duration stretches, which is exactly the physics
     the sleep-based executor cannot realize.
@@ -204,16 +205,24 @@ def _burn(cpu_s: float):
     calibrated iteration count instead: still real contention-visible
     work, but their effective cost rides the per-worker calibration and
     can drift a few percent with host speed — fine for the rank-based
-    differential suites, which never assert absolute rates."""
+    differential suites, which never assert absolute rates.
+
+    `quantum` swaps the unit of work: instead of `_spin_iters`, the
+    clock-polled loop repeats the given zero-arg callable (real
+    featurization ops — see data/featurize.py), with `qrate` (quanta
+    per CPU-second, measured at worker bind) sizing the sub-tick path
+    the way `spin_rate` sizes the spin path. The clock discipline — and
+    therefore the designed-cost == measured-CPU identity calibration
+    relies on — is identical for both units."""
     global _burn_debt
     if cpu_s <= 0:
         return
     if cpu_s >= _TICK_GUARD:
         # error feedback: each burn overshoots by up to one cputime tick
-        # (the clock only moves in ticks), which would bias every
-        # measured per-item CPU high by a constant — carry the overshoot
-        # as debt and shave it off subsequent burns, so the long-run
-        # average burn equals the requested cost exactly
+        # (the clock only moves in ticks) plus up to one quantum, which
+        # would bias every measured per-item CPU high by a constant —
+        # carry the overshoot as debt and shave it off subsequent burns,
+        # so the long-run average burn equals the requested cost exactly
         target = cpu_s - _burn_debt
         if target <= 0:
             _burn_debt -= cpu_s
@@ -223,8 +232,15 @@ def _burn(cpu_s: float):
             elapsed = time.process_time() - t0
             if elapsed >= target:
                 break
-            _spin_iters(2000)
+            if quantum is not None:
+                quantum()
+            else:
+                _spin_iters(2000)
         _burn_debt += elapsed - cpu_s
+        return
+    if quantum is not None and qrate:
+        for _ in range(max(1, int(cpu_s * qrate))):
+            quantum()
         return
     _spin_iters(max(1, int(cpu_s * spin_rate())))
 
@@ -282,28 +298,53 @@ class SpinWork:
             spin_rate()
         self._lock = serial_lock
         self._workers = nworkers
+        self._touch_ballast()
+
+    def _touch_ballast(self):
         if self.ballast_mb > 0 and self._ballast is None:
             buf = bytearray(int(self.ballast_mb * _MB))
             step = _PAGE
             buf[::step] = b"\x01" * len(buf[::step])
             self._ballast = buf
 
-    def __call__(self, *items):
-        a = max(1, self._workers.value) if self._workers is not None else 1
-        serial = self.serial_frac * self.cost
-        par = (self.cost - serial) + (a - 1) * serial
-        if serial > 0:
-            if self._lock is not None:
-                with self._lock:
-                    _burn(serial)
-            else:
-                _burn(serial)
-        _burn(par)
+    def release(self):
+        """Drop worker-side memory before exit. A retiring worker whose
+        exit flush is stuck behind a full downstream queue can linger for
+        the rest of the run (the queue stays full at steady state); with
+        the ballast freed it lingers as a bare interpreter instead of
+        pinning tens of MB per ghost on an already-small host."""
+        self._ballast = None
+
+    def _do_burn(self, cpu_s: float):
+        """The burn unit — subclasses swap in a real-work quantum
+        (data/featurize.py) without touching the contract math."""
+        _burn(cpu_s)
+
+    def _produce(self, items):
+        """The item flowing downstream; real-work subclasses return
+        actual record blocks and their CPU is charged to the parallel
+        portion by __call__."""
         if self.kind == "source":
             return 1
         if self.kind == "join":
             return items
         return items[0] if items else 1
+
+    def __call__(self, *items):
+        a = max(1, self._workers.value) if self._workers is not None else 1
+        serial = self.serial_frac * self.cost
+        par = (self.cost - serial) + (a - 1) * serial
+        t0 = time.process_time()
+        out = self._produce(items)
+        spent = max(0.0, time.process_time() - t0)   # real transform CPU
+        if serial > 0:
+            if self._lock is not None:
+                with self._lock:
+                    self._do_burn(serial)
+            else:
+                self._do_burn(serial)
+        self._do_burn(max(0.0, par - spent))
+        return out
 
 
 def spin_stage_fns(spec: StageGraph, *, ballast: bool = True
@@ -322,12 +363,27 @@ def spin_stage_fns(spec: StageGraph, *, ballast: bool = True
     return fns
 
 
+def stage_fns_for(spec: StageGraph, *, ballast: bool = True
+                  ) -> Dict[str, Callable]:
+    """Work fns matching the spec's `work` mode: `"spin"` (default) gets
+    `spin_stage_fns`; `"real"` gets `featurize_stage_fns` — actual
+    hashing/pooling/padding/collation over synthetic Criteo records
+    (data/featurize.py), same Amdahl contract. Lazy import keeps the
+    spin path free of the featurize module."""
+    if getattr(spec, "work", "spin") == "real":
+        from repro.data.featurize import featurize_stage_fns
+        return featurize_stage_fns(spec, ballast=ballast)
+    return spin_stage_fns(spec, ballast=ballast)
+
+
 # ---------------------------------------------------------------------------
 # worker process plumbing
 # ---------------------------------------------------------------------------
 
-def _q_put(q, item, hard, gate=None) -> bool:
+def _q_put(q, item, hard, gate=None, deadline=None) -> bool:
     while not hard.is_set():
+        if deadline is not None and time.monotonic() >= deadline:
+            return False
         if gate is not None:
             try:
                 if q.qsize() >= max(1, gate.value):
@@ -395,9 +451,18 @@ def _send_stop(stop_sent, out_qs, hard, gate):
 
 
 def _worker_main(fn, in_qs, out_qs, soft, hard, stop_sent, gather_lock,
-                 serial_lock, nworkers, counter, gate):
+                 serial_lock, nworkers, counter, gate, dropped=None):
     """One stage worker process. Soft stop (resize-down / teardown)
-    delivers the in-flight item first; only the hard stop aborts."""
+    delivers the in-flight item if it can COMMIT it within a short
+    grace; an uncommitted item is dropped (counted in `dropped`) so the
+    worker exits promptly. Without the grace bound, a resize-down to a
+    lean allocation would leave every retired worker alive and blocked
+    on a full downstream queue that drains at consumer speed — tens of
+    seconds of ghost processes stealing the very CPU the resize-down
+    was meant to return. Only the hard stop aborts a committed
+    delivery (an item already placed on one fan-out edge is pushed to
+    the remaining edges unconditionally, keeping join streams
+    aligned)."""
     # a forked worker shares the parent's heap copy-on-write; a gen-2 gc
     # pass would traverse (and dirty) every inherited object page,
     # turning shared memory private and blowing up the measured USS the
@@ -407,6 +472,24 @@ def _worker_main(fn, in_qs, out_qs, soft, hard, stop_sent, gather_lock,
     gc.disable()
     if hasattr(fn, "bind"):
         fn.bind(serial_lock, nworkers)
+    try:
+        _worker_loop(fn, in_qs, out_qs, soft, hard, stop_sent, gather_lock,
+                     counter, gate, dropped)
+    finally:
+        if hasattr(fn, "release"):
+            fn.release()
+    # NOTE: a retiring worker may still linger in its interpreter-exit
+    # queue-feeder flush (items it already committed must cross the OS
+    # pipe, which can take as long as the downstream backlog takes to
+    # drain). That wait is blocked-in-write — no CPU — and must NOT be
+    # short-circuited with cancel_join_thread(): killing a feeder that
+    # holds the queue write lock mid-write orphans the lock and wedges
+    # every other writer on that queue permanently. `fn.release()` above
+    # frees the ballast first so the ghost holds no pipeline memory.
+
+
+def _worker_loop(fn, in_qs, out_qs, soft, hard, stop_sent, gather_lock,
+                 counter, gate, dropped):
     while not soft.is_set() and not hard.is_set():
         if not in_qs:                       # source stage
             if stop_sent.is_set():          # a sibling hit EOS
@@ -428,11 +511,25 @@ def _worker_main(fn, in_qs, out_qs, soft, hard, stop_sent, gather_lock,
             if out is None:                 # filtered item
                 continue
         delivered = True
+        committed = False
         for q in out_qs:
-            delivered = _q_put(q, out, hard, gate) and delivered
-        if delivered:
-            with counter.get_lock():
-                counter.value += 1
+            grace = time.monotonic() + 0.25 \
+                if soft.is_set() and not committed else None
+            ok = _q_put(q, out, hard, gate, deadline=grace)
+            if not ok and grace is not None and not hard.is_set():
+                # retiring, and the item landed nowhere: drop it and go
+                if dropped is not None:
+                    with dropped.get_lock():
+                        dropped.value += 1
+                break
+            committed = committed or ok
+            delivered = ok and delivered
+        else:
+            if delivered:
+                with counter.get_lock():
+                    counter.value += 1
+            continue
+        return
 
 
 class _ProcStagePool:
@@ -451,6 +548,7 @@ class _ProcStagePool:
         self._hard = hard_stop
         self.stop_sent = ctx.Event()
         self.counter = ctx.Value("L", 0)            # delivered items
+        self.dropped_ct = ctx.Value("L", 0)         # fast-retire drops
         self.nworkers_val = ctx.Value("i", 1, lock=False)
         self.serial_lock = ctx.Lock()
         self.gather_lock = ctx.Lock() if len(self.in_qs) > 1 else None
@@ -471,7 +569,8 @@ class _ProcStagePool:
                 target=_worker_main,
                 args=(self.fn, self.in_qs, self.out_qs, soft, self._hard,
                       self.stop_sent, self.gather_lock, self.serial_lock,
-                      self.nworkers_val, self.counter, self.out_gate),
+                      self.nworkers_val, self.counter, self.out_gate,
+                      self.dropped_ct),
                 daemon=True)
             p.start()
             if self._on_spawn is not None:
@@ -492,6 +591,11 @@ class _ProcStagePool:
 
     def delivered(self) -> int:
         return int(self.counter.value)
+
+    def dropped(self) -> int:
+        """Items dropped by retiring workers that could not commit
+        their in-flight delivery within the fast-retire grace."""
+        return int(self.dropped_ct.value)
 
     def sync_meter(self):
         """Feed the shared-counter delta into the EWMA meter (decays on
@@ -568,8 +672,16 @@ class _RssSampler(threading.Thread):
 
     def run(self):
         while not self._halt.is_set():
+            t0 = time.monotonic()
             self.sample()
-            self._halt.wait(self.interval)
+            cost = time.monotonic() - t0
+            # bound the sampler's duty cycle at ~10% of one core: a pass
+            # walks /proc smaps for every live worker pid IN THE PARENT
+            # (trainer) process, and during a resize-down the pid set
+            # transiently includes every retiring worker — at a fixed
+            # interval that scan competes with the very device step the
+            # resize was meant to unblock
+            self._halt.wait(max(self.interval, 9.0 * cost))
 
     def stop(self):
         self._halt.set()
@@ -596,14 +708,20 @@ class ProcessPipeline:
                  fns: Optional[Dict[str, Callable]] = None,
                  queue_depth: int = 16, item_mb: Optional[float] = None,
                  machine: Optional[MachineSpec] = None, ctx=None,
-                 rss_interval: float = 0.2):
+                 rss_interval: float = 0.2,
+                 pin_cpus: Optional[int] = None):
         if fns is None:
-            fns = spin_stage_fns(spec)
+            fns = stage_fns_for(spec)
         missing = [s.name for s in spec.stages if s.name not in fns]
         assert not missing, f"missing stage fns: {missing}"
         self.spec = spec
         self.item_mb = item_mb if item_mb is not None else spec.batch_mb
         self.machine = machine if machine is not None else MachineSpec()
+        # feed-bridge knob: cap worker affinity to this many host cores
+        # regardless of machine.n_cpus, reserving the rest for a trainer
+        # process sharing the host (examples/train_dlrm_criteo.py pins
+        # the feed pipeline to 1 core so JAX keeps the others)
+        self.pin_cpus = pin_cpus
         self.prefetch_mb = 2 * self.item_mb
         if ctx is None:
             method = "fork" if "fork" in mp.get_all_start_methods() \
@@ -661,9 +779,10 @@ class ProcessPipeline:
         if not hasattr(os, "sched_setaffinity"):
             return
         host = os.cpu_count() or 1
+        cap = int(self.pin_cpus) if self.pin_cpus is not None \
+            else int(self.machine.n_cpus)
         try:
-            os.sched_setaffinity(
-                pid, range(max(1, min(int(self.machine.n_cpus), host))))
+            os.sched_setaffinity(pid, range(max(1, min(cap, host))))
         except OSError:
             pass
 
@@ -754,6 +873,33 @@ class ProcessPipeline:
                         break
                     time.sleep(0.005)
         self._hard_stop.set()
+        # pump every queue while workers exit: a worker whose interpreter
+        # is flushing buffered queue items at exit blocks on a full pipe
+        # until a reader empties it. The spin plane's int-sized items
+        # never fill the 64KB pipe buffer; real-work record blocks
+        # (data/featurize.py) overflow it at depth 1, so without this
+        # pump every mid-chain worker would hang in its exit flush and
+        # eat the whole join deadline before being terminated.
+        def _alive():
+            return any(pr.is_alive() for pool in self.pools
+                       for pr in pool.procs + pool._retired)
+
+        pump_end = max(deadline - 0.5, time.monotonic() + 0.05)
+        while _alive() and time.monotonic() < pump_end:
+            for q in self.edge_queues.values():
+                try:
+                    while True:
+                        q.get_nowait()
+                except queue.Empty:
+                    pass
+            try:
+                while True:
+                    if not isinstance(self.out_q.get_nowait(), _Stop) \
+                            and drain:
+                        drained += 1
+            except queue.Empty:
+                pass
+            time.sleep(0.01)
         joined = True
         for p in self.pools:
             joined = p.join(max(0.1, deadline - time.monotonic())) and joined
@@ -777,7 +923,8 @@ class ProcessPipeline:
         return {"delivered": delivered, "consumed": consumed,
                 "drained": drained, "joined": joined,
                 "dropped": (max(0, delivered - consumed - drained)
-                            if drain else 0)}
+                            if drain else 0),
+                "dropped_inflight": sum(p.dropped() for p in self.pools)}
 
     # ------------------------------------------------------------ output --
     def get_batch(self, timeout: float = 10.0):

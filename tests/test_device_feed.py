@@ -1,0 +1,361 @@
+"""data/device_feed.py: prefetch depth/ordering/draining, shard math,
+stall metering, and the proc->device bridge composition (fake pipe —
+no processes forked here; the live path is tests/test_featurize.py)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.device_feed import (MeteredFeed, device_prefetch,
+                                    make_train_feed, shard_slice)
+
+
+# ------------------------------------------------------ device_prefetch --
+
+def test_prefetch_preserves_order_and_count():
+    out = list(device_prefetch(iter(range(10)), depth=2))
+    assert [int(np.asarray(x)) for x in out] == list(range(10))
+
+
+def test_prefetch_keeps_depth_in_flight():
+    """After the consumer pulls item k, the source must have been
+    advanced exactly depth items ahead (transfer overlapped with
+    compute — the whole point of the double buffer)."""
+    pulled = []
+
+    def src():
+        for i in range(8):
+            pulled.append(i)
+            yield i
+
+    it = device_prefetch(src(), depth=3)
+    next(it)
+    # one yielded + 3 in the buffer
+    assert len(pulled) == 4
+    next(it)
+    assert len(pulled) == 5
+
+
+def test_prefetch_drains_short_and_empty_iterators():
+    # source shorter than depth: everything still comes out, in order
+    out = list(device_prefetch(iter([7, 8]), depth=5))
+    assert [int(np.asarray(x)) for x in out] == [7, 8]
+    assert list(device_prefetch(iter([]), depth=2)) == []
+
+
+def test_prefetch_stopiteration_draining():
+    """StopIteration mid-refill must not drop buffered items."""
+    it = device_prefetch(iter(range(4)), depth=2)
+    assert int(np.asarray(next(it))) == 0     # buffer holds 1, 2
+    assert [int(np.asarray(x)) for x in it] == [1, 2, 3]
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_prefetch_tree_batches():
+    batches = [{"a": np.full((2,), i), "b": np.full((3,), -i)}
+               for i in range(4)]
+    out = list(device_prefetch(iter(batches), depth=2))
+    assert len(out) == 4
+    for i, b in enumerate(out):
+        np.testing.assert_array_equal(np.asarray(b["a"]), np.full((2,), i))
+        np.testing.assert_array_equal(np.asarray(b["b"]), np.full((3,), -i))
+
+
+# ---------------------------------------------------------- shard_slice --
+
+def test_shard_slice_even_split():
+    batch = {"x": np.arange(8), "y": np.arange(16).reshape(8, 2)}
+    s0 = shard_slice(batch, 0, 4)
+    s3 = shard_slice(batch, 3, 4)
+    np.testing.assert_array_equal(s0["x"], [0, 1])
+    np.testing.assert_array_equal(s3["x"], [6, 7])
+    assert s3["y"].shape == (2, 2)
+
+
+def test_shard_slice_remainder_dropped_consistently():
+    """n not divisible by n_hosts: every host gets floor(n/n_hosts) rows
+    and the tail remainder is dropped (no host sees a ragged batch)."""
+    batch = {"x": np.arange(10)}
+    sizes = [shard_slice(batch, h, 3)["x"].shape[0] for h in range(3)]
+    assert sizes == [3, 3, 3]
+    seen = np.concatenate([shard_slice(batch, h, 3)["x"] for h in range(3)])
+    np.testing.assert_array_equal(seen, np.arange(9))   # 9 dropped
+
+
+def test_shard_slice_single_host_identity():
+    batch = {"x": np.arange(5)}
+    np.testing.assert_array_equal(shard_slice(batch, 0, 1)["x"], batch["x"])
+
+
+# ----------------------------------------------------------- MeteredFeed --
+
+def test_metered_feed_counts_and_passes_through():
+    feed = MeteredFeed(iter([10, 20, 30]))
+    assert next(feed) == 10
+    assert [x for x in feed] == [20, 30]
+    c = feed.counters()
+    assert c["batches"] == 3.0
+    assert c["stall_s"] >= 0.0
+    assert c["time"] <= time.monotonic()
+
+
+def test_metered_feed_times_blocking_next():
+    def slow():
+        yield 1
+        time.sleep(0.05)
+        yield 2
+
+    feed = MeteredFeed(slow())
+    next(feed)
+    c0 = feed.counters()
+    next(feed)
+    c1 = feed.counters()
+    assert c1["stall_s"] - c0["stall_s"] >= 0.04
+    assert c1["batches"] - c0["batches"] == 1.0
+
+
+def test_metered_feed_stall_charged_even_on_stopiteration():
+    feed = MeteredFeed(iter([]))
+    with pytest.raises(StopIteration):
+        next(feed)
+    assert feed.counters()["batches"] == 0.0
+
+
+# ------------------------------------------------------- make_train_feed --
+
+class _FakePipe:
+    """ProcessPipeline-shaped: get_batch returns numbered dict batches."""
+
+    def __init__(self):
+        self.i = 0
+        self.timeouts = []
+
+    def get_batch(self, timeout=10.0):
+        self.timeouts.append(timeout)
+        self.i += 1
+        return {"x": np.full((4,), self.i - 1)}
+
+
+def test_make_train_feed_composes_bridge():
+    pipe = _FakePipe()
+    feed = make_train_feed(pipe, depth=2, timeout=33.0)
+    assert isinstance(feed, MeteredFeed)
+    b0 = next(feed)
+    np.testing.assert_array_equal(np.asarray(b0["x"]), np.zeros(4))
+    # depth batches in flight beyond the one consumed
+    assert pipe.i == 3
+    assert set(pipe.timeouts) == {33.0}
+    b1 = next(feed)
+    np.testing.assert_array_equal(np.asarray(b1["x"]), np.ones(4))
+    assert feed.counters()["batches"] == 2.0
+
+
+# -------------------------------------------------- FeedBackend (stubbed) --
+# The measure/apply split and the two device-idle modes, on hand-driven
+# counters (no processes). The live path runs in examples/ and
+# benchmarks/fig_train_feed.py.
+
+from repro.api import FeedBackend, Session, Telemetry          # noqa: E402
+from repro.data.pipeline import StageGraph, StageSpec          # noqa: E402
+from repro.data.simulator import Allocation, MachineSpec       # noqa: E402
+
+
+def _spec2():
+    return StageGraph("fb2", (
+        StageSpec("src", "source", cost=0.01, serial_frac=0.0,
+                  mem_per_worker_mb=4.0),
+        StageSpec("udf", "udf", cost=0.01, serial_frac=0.0,
+                  mem_per_worker_mb=4.0, inputs=("src",)),
+    ), batch_mb=1.0)
+
+
+class _StubPipe:
+    def __init__(self, machine):
+        self.spec = _spec2()
+        self.machine = machine
+        self.c = {"delivered": 0.0, "consumed": 0.0, "time": 0.0}
+        self.rss = 64.0
+        self.allocs = []
+        self.shutdowns = 0
+
+    def counters(self):
+        return dict(self.c)
+
+    def rss_mb(self):
+        return self.rss
+
+    def stats(self):
+        return {"throughput": 99.0, "stage_latency": [0.01, 0.01],
+                "workers": np.array([2, 1]), "mem_frac": 0.1}
+
+    def set_allocation(self, workers, prefetch_mb):
+        self.allocs.append((list(workers), prefetch_mb))
+
+    def apply_cpu_cap(self):
+        pass
+
+    def shutdown(self, drain=False, timeout=10.0):
+        self.shutdowns += 1
+        return {"delivered": 9, "consumed": 9, "drained": 0,
+                "joined": True, "dropped": 0}
+
+
+class _StubFeed:
+    def __init__(self):
+        self.c = {"batches": 0.0, "stall_s": 0.0, "time": 0.0}
+
+    def counters(self):
+        return dict(self.c)
+
+
+def _feed_backend(device_step_s=None, mem_mb=4096.0):
+    pipe = _StubPipe(MachineSpec(n_cpus=4, mem_mb=mem_mb))
+    feed = _StubFeed()
+    return FeedBackend(pipe, feed, device_step_s=device_step_s), pipe, feed
+
+
+def test_feed_backend_measure_differences_windows():
+    bk, pipe, feed = _feed_backend(device_step_s=0.5)
+    # window 1: 10s wall, 8 batches on device, 16 items consumed, 1s stall
+    feed.c = {"batches": 8.0, "stall_s": 1.0, "time": 10.0}
+    pipe.c = {"delivered": 16.0, "consumed": 16.0, "time": 10.0}
+    tel = bk.measure()
+    assert tel.throughput == pytest.approx(1.6)
+    assert tel.step_time_s == pytest.approx(10.0 / 8)
+    assert tel.feed_stall_s == pytest.approx(1.0)
+    # idle = 1 - batches * device_step / wall = 1 - 8*0.5/10
+    assert tel.device_idle_frac == pytest.approx(0.6)
+    assert tel.used_cpus == 3                 # sum of stats()["workers"]
+    assert "stage_latency" in tel.extras      # InTune's live-mode trigger
+    assert "throughput" not in tel.extras
+    # window 2 is differenced, not cumulative: 2 batches over 1s
+    feed.c = {"batches": 10.0, "stall_s": 1.0, "time": 11.0}
+    pipe.c = {"delivered": 20.0, "consumed": 20.0, "time": 11.0}
+    tel2 = bk.measure()
+    assert tel2.throughput == pytest.approx(4.0)
+    assert tel2.device_idle_frac == pytest.approx(0.0)   # clamped at 0
+    assert tel2.step_time_s == pytest.approx(0.5)
+
+
+def test_feed_backend_stall_mode_without_device_step():
+    bk, pipe, feed = _feed_backend(device_step_s=None)
+    feed.c = {"batches": 4.0, "stall_s": 2.5, "time": 10.0}
+    pipe.c = {"delivered": 4.0, "consumed": 4.0, "time": 10.0}
+    tel = bk.measure()
+    assert tel.device_idle_frac == pytest.approx(0.25)   # stall / wall
+
+
+def test_feed_backend_zero_batch_window():
+    bk, pipe, feed = _feed_backend(device_step_s=0.5)
+    feed.c = {"batches": 0.0, "stall_s": 3.0, "time": 3.0}
+    tel = bk.measure()
+    assert tel.step_time_s is None
+    assert tel.device_idle_frac == pytest.approx(1.0)
+
+
+def test_feed_backend_apply_validates_and_caches():
+    bk, pipe, feed = _feed_backend()
+    alloc = Allocation(np.array([2, 1], dtype=int), prefetch_mb=4.0)
+    tel = bk.apply(alloc)
+    assert pipe.allocs == [([2, 1], 4.0)]
+    assert tel.extras.get("pending")          # cached pre-measure Telemetry
+    feed.c = {"batches": 2.0, "stall_s": 0.0, "time": 1.0}
+    measured = bk.measure()
+    assert bk.apply(alloc) is measured        # apply returns LAST measure
+    with pytest.raises(Exception):
+        bk.apply(Allocation(np.array([2], dtype=int), prefetch_mb=4.0))
+    # apply(None) falls through to measure (self-driving contract)
+    feed.c = {"batches": 3.0, "stall_s": 0.0, "time": 2.0}
+    assert bk.apply(None).throughput >= 0.0
+
+
+def test_feed_backend_oom_entry_counting():
+    bk, pipe, feed = _feed_backend(mem_mb=100.0)
+    ticks = []
+    for rss in (50.0, 150.0, 150.0, 50.0, 150.0):
+        pipe.rss = rss
+        feed.c["time"] += 1.0
+        pipe.c["consumed"] += 1.0
+        ticks.append(bk.measure().oom)
+    # report-only: oomed flags every over-budget window, but the COUNT
+    # increments only on entry into the over-budget state
+    assert ticks == [False, True, True, False, True]
+    assert bk.oom_count == 2
+
+
+def test_feed_backend_shutdown_summary():
+    bk, pipe, _ = _feed_backend()
+    summary = bk.shutdown()
+    assert pipe.shutdowns == 1
+    assert summary["all_joined"] and summary["dropped_batches"] == 0
+    assert bk.shutdown() is summary           # idempotent, no second teardown
+    assert pipe.shutdowns == 1
+    with pytest.raises(RuntimeError):
+        bk.measure()
+
+
+def test_telemetry_feed_fields_hidden_when_unset():
+    """Backends construct Telemetry positionally; dict-shaped consumers
+    (golden JSONs, RunResult series) must see NO new keys unless the
+    feed fields are actually populated."""
+    plain = Telemetry(throughput=5.0, mem_mb=10.0, used_cpus=2)
+    assert "device_idle_frac" not in plain.keys()
+    assert "device_idle_frac" not in plain.to_dict()
+    fed = Telemetry(throughput=5.0, mem_mb=10.0, used_cpus=2,
+                    device_idle_frac=0.3, step_time_s=0.1, feed_stall_s=0.0)
+    assert fed.to_dict()["device_idle_frac"] == pytest.approx(0.3)
+    assert "step_time_s" in fed.keys()
+
+
+def test_intune_feed_reward_uses_device_idle():
+    """At a feed boundary the reward must be device business, not pipe
+    throughput — pipe throughput REWARDS stealing the trainer's cores
+    (the regression the first fig_train_feed run measured)."""
+    from repro.core.controller import InTune
+    spec, machine = _spec2(), MachineSpec(n_cpus=8, mem_mb=4096.0)
+    tuner = InTune(spec, machine, seed=0, head="factored",
+                   init_alloc=Allocation(np.array([1, 1], dtype=int),
+                                         prefetch_mb=2.0))
+    np.testing.assert_array_equal(tuner.env.alloc.workers, [1, 1])
+    tuner.propose(spec, machine, None)
+    live = {"stage_latency": [0.01, 0.02], "workers": [1, 1],
+            "free_cpus": 6.0, "mem_frac": 0.2, "prefetch_mb": 2.0}
+    tel = Telemetry(throughput=1e6, mem_mb=64.0, used_cpus=2,
+                    extras=dict(live), device_idle_frac=0.25,
+                    step_time_s=0.1, feed_stall_s=0.0)
+    tuner.observe(tel)
+    # (1 - idle) * (1 - mem_frac), NOT throughput-scaled (1e6 would
+    # explode the throughput-based reward)
+    assert tuner.history[-1]["reward"] == pytest.approx(0.75 * 0.8)
+    # without feed fields the legacy throughput reward still applies
+    tuner.propose(spec, machine, None)
+    tel2 = Telemetry(throughput=5.0, mem_mb=64.0, used_cpus=2,
+                     extras=dict(live))
+    tuner.observe(tel2)
+    expected = 5.0 / tuner.env.reward_scale * 0.8
+    assert tuner.history[-1]["reward"] == pytest.approx(expected)
+
+
+def test_session_step_measure_observe_propose_apply_order():
+    calls = []
+
+    class _Opt:
+        def observe(self, tel):
+            calls.append(("observe", tel.throughput))
+
+        def propose(self, spec, machine, stats=None):
+            calls.append(("propose", machine.n_cpus,
+                          stats and stats.get("throughput")))
+            return Allocation(np.array([1, 1], dtype=int), prefetch_mb=2.0)
+
+    bk, pipe, feed = _feed_backend()
+    feed.c = {"batches": 2.0, "stall_s": 0.0, "time": 1.0}
+    pipe.c = {"delivered": 3.0, "consumed": 3.0, "time": 1.0}
+    tel = Session(bk, _Opt()).step()
+    assert tel.throughput == pytest.approx(3.0)
+    assert calls == [("observe", pytest.approx(3.0)),
+                     ("propose", 4, 99.0)]
+    assert pipe.allocs == [([1, 1], 2.0)]
+
+
