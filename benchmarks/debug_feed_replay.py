@@ -46,7 +46,6 @@ def main():
     feed = make_train_feed(pipe, depth=2, timeout=max(120.0, 200.0 * step_time))
     backend = FeedBackend(pipe, feed, device_step_s=step_time)
     session = Session(backend, optimizer)
-    settle = False
     try:
         for i in range(steps):
             batch = next(feed)
@@ -69,21 +68,18 @@ def main():
                           f" w={pipe.worker_counts()} ret={retired}"
                           f" load={load:.1f} rss={rss:.0f} avail={avail}")
                     continue
-                if settle:
-                    m = backend.measure()
+                m = backend.measure()
+                if m.extras.get("settling"):
+                    # centralized post-resize settle flag (FeedBackend)
                     print(f"t{i:3d} SETT idle={m.device_idle_frac:.3f}"
                           f" prod={m.extras.get('produced')}"
                           f" w={pipe.worker_counts()} ret={retired}"
                           f" load={load:.1f} rss={rss:.0f} avail={avail}")
-                    settle = settle + 1 \
-                        if (settle < 4 and m.extras.get("produced", 1) <= 0) \
-                        else 0
                     continue
                 before = (list(pipe.worker_counts()), pipe.prefetch_mb)
-                tel = session.step()
+                tel = session.step(m)
                 after = (list(pipe.worker_counts()), pipe.prefetch_mb)
-                settle = int(after != before)
-                tag = "MOVE" if settle else "tick"
+                tag = "MOVE" if after != before else "tick"
                 idle = tel.device_idle_frac
                 print(f"t{i:3d} {tag} idle={idle if idle is None else round(idle,3)}"
                       f" w={before[0]}->{after[0]} ret={retired}"

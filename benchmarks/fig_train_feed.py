@@ -102,7 +102,6 @@ def run_arm(name, make_opt, *, step_fn, params, opt_state, rec, spec,
     backend = FeedBackend(pipe, feed, device_step_s=step_time)
     session = Session(backend, optimizer)
     idles, stimes, workers = [], [], []
-    settle = 0              # windows discarded since the last move
     try:
         for i in range(steps):
             batch = next(feed)
@@ -119,30 +118,21 @@ def run_arm(name, make_opt, *, step_fn, params, opt_state, rec, spec,
                     # without observing or moving.
                     backend.measure()
                     continue
-                if settle:
+                tel = backend.measure()
+                if tel.extras.get("settling"):
                     # the window that just closed measured the
                     # TRANSITION into the last-applied allocation —
                     # tearing down / spawning worker processes can
                     # starve the feed for a full window at ANY target
-                    # allocation. Charging it to the new allocation
-                    # career-kills good placements (the serving switch
-                    # back to the incumbent reads idle=1.0 and halves
-                    # its mean). Worse, a big resize-DOWN floods the
-                    # host with the retiring workers' exit flushes and
-                    # the pipe can deliver NOTHING for several windows;
-                    # keep discarding while production is zero (capped,
-                    # so a genuinely dead allocation still gets
-                    # charged). The first producing window measures the
-                    # allocation itself, warmed.
-                    m = backend.measure()
-                    settle = settle + 1 \
-                        if (settle < 4 and m.extras.get("produced", 1) <= 0) \
-                        else 0
+                    # allocation, and charging it to the new allocation
+                    # career-kills good placements. FeedBackend flags
+                    # such windows (first window after a resize, held
+                    # while production stays zero, capped so a dead
+                    # allocation is still charged — see
+                    # backends.FeedBackend.measure): discard them
+                    # without observing or moving.
                     continue
-                before = (list(pipe.worker_counts()), pipe.prefetch_mb)
-                tel = session.step()
-                settle = int((list(pipe.worker_counts()),
-                              pipe.prefetch_mb) != before)
+                tel = session.step(tel)
                 if tel.step_time_s is not None:
                     idles.append(float(tel.device_idle_frac))
                     stimes.append(float(tel.step_time_s))

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -310,6 +311,9 @@ class ProcessBackend(_SingleRigBackend):
         self._trainer = TrainerSpec(spec.name, spec, machine, model_latency)
         self._slot = RigSlot(self._launch)
         self._slot.rig = self._launch(machine.n_cpus)
+        # freshness accounting for streaming graphs (inert otherwise)
+        self._stale = 0.0
+        self._delay_win: deque = deque(maxlen=100)
 
     def _launch(self, eff_cpus: Optional[int] = None):
         from repro.data.proc_executor import ProcessPipeline, stage_fns_for
@@ -348,8 +352,36 @@ class ProcessBackend(_SingleRigBackend):
             return Telemetry(0.0, rss, used, True, True)
         # NO over-subscription discount: the contention is physical and
         # already inside the measured rate
-        return Telemetry(tput, rss, used, False, False,
-                         self._rig_extras())
+        extras = self._rig_extras()
+        stream = self._stream_fields(tput)
+        if stream:
+            extras.pop("backlog_items", None)   # promoted to typed field
+        return Telemetry(tput, rss, used, False, False, extras, **stream)
+
+    def _stream_fields(self, tput: float) -> Dict[str, Any]:
+        """Freshness fields from the pipe's exact stream accounting
+        (arrivals - emitted); {} for non-stream graphs. Staleness is the
+        backlog's drain time at the measured rate; while fully stalled
+        with work queued it ages by the wall window instead. NOTE: a
+        relaunch after an RSS OOM restarts the stream epoch (the new
+        process's arrival clock starts at zero) — the sim retains
+        backlog across its restart window; DESIGN.md §11 records the
+        gap."""
+        state = getattr(self._slot.rig.pipe, "stream_state", lambda: None)()
+        if state is None:
+            return {}
+        backlog = float(state["backlog"])
+        if tput > 1e-9:
+            self._stale = backlog / tput
+        elif backlog > 1e-9:
+            self._stale += self.window_s
+        else:
+            self._stale = 0.0
+        self._delay_win.append(self._stale)
+        return {"backlog_items": backlog,
+                "batch_staleness_s": self._stale,
+                "p99_queue_delay_s": float(np.percentile(self._delay_win,
+                                                         99.0))}
 
 
 class FeedBackend(BackendBase):
@@ -404,6 +436,7 @@ class FeedBackend(BackendBase):
         self.time = 0
         self._oom_count = 0
         self._over_budget = False
+        self._settle = 0
         self._mark_pipe = pipe.counters()
         self._mark_feed = feed.counters()
         self._last_tel = Telemetry(extras={"pending": True})
@@ -421,6 +454,7 @@ class FeedBackend(BackendBase):
         stall = now_f["stall_s"] - self._mark_feed["stall_s"]
         consumed = now_p["consumed"] - self._mark_pipe["consumed"]
         produced = now_p["delivered"] - self._mark_pipe["delivered"]
+        prev_pipe_t = self._mark_pipe["time"]
         self._mark_pipe, self._mark_feed = now_p, now_f
         rss = self.pipe.rss_mb()
         over = rss > self._machine.mem_mb
@@ -432,11 +466,23 @@ class FeedBackend(BackendBase):
         # what flips learning observers (InTune._live_obs) onto their
         # measured branch, same as the other live backends
         extras = {k: v for k, v in stats.items() if k != "throughput"}
-        # raw window deltas for callers that need to tell "allocation is
-        # slow" from "pipeline is mid-transition" (fig_train_feed's
-        # settle discard keys off produced == 0)
+        # raw window deltas for callers that need raw attribution data
         extras["produced"] = produced
         extras["consumed"] = consumed
+        # THE settling flag (ISSUE 7: centralizes the per-driver
+        # `produced == 0` heuristics): the first window after a worker
+        # resize is flagged — fresh workers spend ~0.2s self-calibrating
+        # before producing — and the flag holds while the pipe stays
+        # unproductive, up to a bound so a genuinely starved allocation
+        # is eventually charged honestly
+        resize_at = now_p.get("last_resize_at", 0.0)
+        if resize_at > prev_pipe_t:
+            self._settle = 1
+        elif self._settle and produced <= 0 and self._settle < 4:
+            self._settle += 1
+        else:
+            self._settle = 0
+        extras["settling"] = bool(self._settle)
         if self.device_step_s is not None:
             # busy credit is capped at what the pipeline PRODUCED this
             # window: a window that drains buffered inventory can step
@@ -483,6 +529,11 @@ class FeedBackend(BackendBase):
                 "n_cpus": self._machine.n_cpus}
 
     def _do_shutdown(self) -> Dict[str, Any]:
+        # stop the feed's producer thread FIRST: a prefetcher still
+        # pulling get_batch during pipe teardown races the queue close
+        close = getattr(self.feed, "close", None)
+        if close is not None:
+            close()
         acct = self.pipe.shutdown(drain=False, timeout=10.0)
         return {"dropped_batches": int(acct.get("dropped", 0)),
                 "all_joined": bool(acct.get("joined", False)),

@@ -128,10 +128,12 @@ class Session:
         return res
 
     # ------------------------------------------------------ train-driven --
-    def step(self) -> Telemetry:
+    def step(self, tel: Optional[Telemetry] = None) -> Telemetry:
         """One tuning tick driven by an EXTERNAL clock (a train loop):
         measure the window that just ran, let the optimizer observe it,
-        then propose + apply the next allocation.
+        then propose + apply the next allocation. A caller that already
+        measured (e.g. to inspect the `settling` flag before deciding to
+        tune) passes that Telemetry in; otherwise the backend measures.
 
         The ordering matters for learning optimizers: `observe` must see
         the telemetry produced UNDER the previously-applied allocation
@@ -150,9 +152,10 @@ class Session:
         FeedBackend) fall back to `apply(None)` for the measurement,
         which analytic/self-driving backends treat as a plain tick.
         """
-        measure = getattr(self.backend, "measure", None)
-        tel = measure() if callable(measure) \
-            else self.backend.apply(None)
+        if tel is None:
+            measure = getattr(self.backend, "measure", None)
+            tel = measure() if callable(measure) \
+                else self.backend.apply(None)
         if self.optimizer is not None:
             self.optimizer.observe(tel)
             alloc = self.optimizer.propose(self.spec, self.backend.machine,

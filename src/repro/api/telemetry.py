@@ -24,6 +24,14 @@ _CORE = ("throughput", "mem_mb", "used_cpus", "oom", "restarting")
 # dict-shaped consumers of sim/executor telemetry see no new keys.
 _FEED = ("device_idle_frac", "step_time_s", "feed_stall_s")
 
+# Freshness fields (ISSUE 7): reported only when the graph has a
+# streaming source (kind="stream"). Same None-means-absent contract as
+# _FEED, so fig5/fig7 goldens stay byte-identical.
+_STREAM = ("backlog_items", "batch_staleness_s", "p99_queue_delay_s")
+
+# Every optional (hidden-when-None) field.
+_OPTIONAL = _FEED + _STREAM
+
 
 class _DictCompat:
     """The dict-dialect shim shared by Telemetry and RunResult: typed
@@ -84,6 +92,14 @@ class Telemetry(_DictCompat):
                       paper's headline metric (accelerator starvation)
     step_time_s       mean wall seconds per train step over the window
     feed_stall_s      total blocked-on-feed seconds over the window
+
+    Freshness fields (None unless the graph has a streaming source —
+    see data/stream.ArrivalProcess):
+
+    backlog_items       batches arrived but not yet drained
+    batch_staleness_s   age of the batch now leaving the pipeline — the
+                        backlog's drain time at the current throughput
+    p99_queue_delay_s   p99 of staleness over a sliding window of ticks
     """
     throughput: float = 0.0
     mem_mb: float = 0.0
@@ -94,20 +110,24 @@ class Telemetry(_DictCompat):
     device_idle_frac: Optional[float] = None
     step_time_s: Optional[float] = None
     feed_stall_s: Optional[float] = None
+    backlog_items: Optional[float] = None
+    batch_staleness_s: Optional[float] = None
+    p99_queue_delay_s: Optional[float] = None
 
     # Positional construction (`Telemetry(tput, rss, used, False, False,
-    # extras)`) is load-bearing across backends and tests, so the feed
-    # fields live AFTER extras. The mapping dialect hides them when None.
-    _FIELDS = _CORE + _FEED
+    # extras)`) is load-bearing across backends and tests, so the feed +
+    # stream fields live AFTER extras. The mapping dialect hides them
+    # when None.
+    _FIELDS = _CORE + _FEED + _STREAM
 
     def keys(self):
         return ([k for k in self._FIELDS
-                 if k not in _FEED or getattr(self, k) is not None]
+                 if k not in _OPTIONAL or getattr(self, k) is not None]
                 + list(self.extras))
 
     def to_dict(self) -> Dict[str, Any]:
         d = {k: getattr(self, k) for k in self._FIELDS
-             if k not in _FEED or getattr(self, k) is not None}
+             if k not in _OPTIONAL or getattr(self, k) is not None}
         d.update(self.extras)
         return d
 
@@ -117,7 +137,7 @@ class Telemetry(_DictCompat):
         if isinstance(metrics, Telemetry):
             return metrics
         extras = {k: v for k, v in metrics.items()
-                  if k not in _CORE and k not in _FEED}
+                  if k not in _CORE and k not in _OPTIONAL}
         return cls(throughput=metrics.get("throughput", 0.0),
                    mem_mb=metrics.get("mem_mb", 0.0),
                    used_cpus=metrics.get("used_cpus", 0),
@@ -126,7 +146,10 @@ class Telemetry(_DictCompat):
                    extras=extras,
                    device_idle_frac=metrics.get("device_idle_frac"),
                    step_time_s=metrics.get("step_time_s"),
-                   feed_stall_s=metrics.get("feed_stall_s"))
+                   feed_stall_s=metrics.get("feed_stall_s"),
+                   backlog_items=metrics.get("backlog_items"),
+                   batch_staleness_s=metrics.get("batch_staleness_s"),
+                   p99_queue_delay_s=metrics.get("p99_queue_delay_s"))
 
     @classmethod
     def dead_tick(cls) -> "Telemetry":

@@ -56,7 +56,10 @@ class InTune:
                  finetune_eps: Optional[float] = 0.4,
                  init_alloc: Optional[Allocation] = None,
                  lcb_coef: float = 0.0,
-                 switch_margin: float = 0.0):
+                 switch_margin: float = 0.0,
+                 stale_scale: float = 1.0,
+                 readapt_stale_s: float = 10.0,
+                 readapt_drift: float = 0.5):
         self.spec = spec
         self.env = PipelineEnv(spec, machine, model_latency, seed=seed)
         if init_alloc is not None:
@@ -113,6 +116,30 @@ class InTune:
         # in [0, 1]).
         self.lcb_coef = lcb_coef
         self.switch_margin = switch_margin
+        # streaming (ISSUE 7): freshness folds into the reward through
+        # staleness AGING — the per-window GROWTH of batch staleness —
+        # as 1/(1 + aging/stale_scale). Growth, not the absolute level:
+        # absolute staleness is a function of how long the overload has
+        # lasted, so it would score the same allocation differently at
+        # minute 1 and minute 5 of a spike and corrupt the incumbent
+        # statistics. Aging is stationary: an allocation that drains
+        # backlog ages 0 regardless of when it is visited, one that
+        # falls behind ages at its (fixed) shortfall rate. In a trough
+        # every keeping-up allocation ages 0 and the (1 - mem_frac)
+        # factor makes shedding workers pay.
+        # A serving-mode incumbent is DETHRONED (exploration reopens,
+        # incumbent stats cleared) when absolute staleness sits above
+        # readapt_stale_s without improving since serving began, or
+        # measured throughput drifts DOWN by more than readapt_drift of
+        # its serving-time EWMA: the traffic the incumbent was crowned
+        # under no longer exists, so its statistics are stale too.
+        # 0 disables either trigger (see _stream_readapt).
+        self.stale_scale = stale_scale
+        self.readapt_stale_s = readapt_stale_s
+        self.readapt_drift = readapt_drift
+        self._prev_stale = 0.0
+        self._serve_stale0 = float("inf")
+        self._tput_ref: Optional[float] = None
         self.obs = self.env.observe()
         self.history: list[dict] = []
 
@@ -229,6 +256,8 @@ class InTune:
             nobs = self.env.observe()
         idle = metrics.get("device_idle_frac") \
             if hasattr(metrics, "get") else None
+        stale = metrics.get("batch_staleness_s") \
+            if hasattr(metrics, "get") else None
         if idle is not None:
             # feed-boundary telemetry (FeedBackend): the objective IS
             # keeping the device busy. Pipe throughput would be the
@@ -236,6 +265,20 @@ class InTune:
             # workers raise pipe throughput by stealing the trainer's
             # cores, which is exactly what device_idle_frac charges for.
             reward = (1.0 - idle) * (1 - mem_frac)
+        elif stale is not None:
+            # streaming telemetry: throughput alone can't distinguish
+            # "keeping up" from "an arrival trough" — the freshness
+            # factor charges for staleness GROWTH this window (see
+            # __init__: growth is stationary across a spike, the
+            # absolute level is not), so an allocation falling behind
+            # scores low even while its throughput looks fine, and in
+            # a trough the highest reward goes to the leanest
+            # allocation that stays fresh (shed workers, save memory).
+            aging = max(0.0, float(stale) - self._prev_stale)
+            self._prev_stale = float(stale)
+            fresh = 1.0 / (1.0 + aging / self.stale_scale)
+            reward = (metrics["throughput"] / self.env.reward_scale) \
+                * (1 - mem_frac) * fresh
         else:
             reward = (metrics["throughput"] / self.env.reward_scale) \
                 * (1 - mem_frac)
@@ -267,6 +310,53 @@ class InTune:
                 # allocation. In live mode the next propose(stats=...)
                 # supplies the real observation — never fabricate one.
                 self.obs = self.env.observe()
+        if stale is not None:
+            self._stream_readapt(float(stale), float(metrics["throughput"]))
+
+    def _stream_readapt(self, stale: float, tput: float) -> None:
+        """Serving-mode re-adaptation triggers for streaming graphs: the
+        incumbent was crowned under the traffic of its tuning window, so
+        when staleness crosses the scale (backlog building — a spike the
+        incumbent can't drain) or throughput drifts DOWN from its
+        serving-time EWMA (a trough leaving workers idle), reopen
+        exploration exactly as a machine resize does. Upward drift is
+        deliberately NOT a trigger: throughput rising while freshness
+        holds means a demand surge is being served — reopening would
+        trade a working allocation for an exploration storm on a loaded
+        host, and the surge the incumbent CANNOT serve is exactly what
+        the staleness trigger catches. The staleness trigger is level-based with a
+        progress guard: reopen only when staleness is over the line AND
+        has not improved since serving began. The guard separates the
+        two ways to be stale: an incumbent draining a spike's backlog at
+        full rate is making progress and must be left alone, while one
+        whose capacity is below the arrival rate shows no improvement
+        and gets retried after every failed serving stretch (the
+        exploration window is the refractory period). An edge trigger
+        here is a trap: if one reopening crowns a bad incumbent,
+        staleness never re-crosses (it never fell) and the controller
+        serves that bad incumbent for the rest of the overload."""
+        serving = self.ticks_since_reset >= self.finetune_ticks
+        if self.ticks_since_reset == self.finetune_ticks:
+            self._serve_stale0 = stale
+        crossed = (self.ticks_since_reset > self.finetune_ticks
+                   and self.readapt_stale_s > 0
+                   and stale > self.readapt_stale_s
+                   and stale >= self._serve_stale0)
+        drift = False
+        if self._tput_ref is None:
+            self._tput_ref = tput
+        else:
+            if serving and self.readapt_drift > 0 and self._tput_ref > 1e-9 \
+                    and (self._tput_ref - tput) \
+                    > self.readapt_drift * self._tput_ref:
+                drift = True
+            self._tput_ref += 0.2 * (tput - self._tput_ref)
+        if serving and (crossed or drift):
+            self.ticks_since_reset = 0
+            self.best = (-1.0, None)
+            self._alloc_stats = {}
+            self._tput_ref = None
+            self._serve_stale0 = float("inf")
 
     def _track_best(self, reward: float) -> None:
         """Update the incumbent from a measured window (protocol path).

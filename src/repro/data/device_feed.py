@@ -4,10 +4,20 @@ Wraps any batch iterator; while the model runs step t, batch t+1 is
 already being transferred (jax.device_put is async). On a pod, each host
 feeds only its shard of the global batch (`shard_slice`). This is the
 "prefetch to accelerator" stage of the paper's pipeline, realized for JAX.
+
+The prefetcher is a background producer THREAD feeding a bounded buffer
+(ISSUE 7 bugfix). The original generator version refilled eagerly before
+yielding — `buf.append(put(next(it)))` ran on the CONSUMER's stack, so
+every `__next__` blocked on a synchronous upstream pull regardless of
+`depth`, and `MeteredFeed.stall_s` charged the full producer latency to
+the device boundary. With a real producer thread, `depth` batches are
+genuinely in flight and a stall only accrues when the buffer is empty —
+i.e. the pipeline fell behind by more than the prefetch budget.
 """
 from __future__ import annotations
 
-import collections
+import queue
+import threading
 import time
 from typing import Callable, Dict, Iterator, Optional
 
@@ -15,28 +25,101 @@ import jax
 import numpy as np
 
 
-def device_prefetch(it: Iterator, depth: int = 2, sharding=None):
-    """Yields device-resident batches, keeping `depth` in flight."""
-    buf = collections.deque()
+class ShardError(ValueError):
+    """A global batch cannot be split evenly across hosts."""
 
-    def put(batch):
-        if sharding is not None:
+
+_SENTINEL = object()
+
+
+class DevicePrefetcher:
+    """Iterator of device-resident batches with `depth` genuinely in
+    flight: a daemon producer thread pulls from `it`, transfers via
+    `jax.device_put` (async — the transfer overlaps compute), and parks
+    results in a buffer. A counting semaphore of `depth` permits bounds
+    the in-flight set: the producer acquires a permit per pull, the
+    consumer releases one per yield, so at most `depth` batches sit
+    between the upstream iterator and the consumer.
+
+    Shutdown: upstream exhaustion or error lands a sentinel in the
+    buffer (the error re-raises on the consumer's stack); `close()`
+    stops the producer and joins it. Iterating to StopIteration also
+    joins the thread, so the common full-drain path needs no explicit
+    close.
+    """
+
+    def __init__(self, it: Iterator, depth: int = 2, sharding=None,
+                 on_close: Optional[Callable[[], None]] = None):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self._it = it
+        self._sharding = sharding
+        self._on_close = on_close
+        self._q: "queue.Queue" = queue.Queue()
+        self._sem = threading.Semaphore(depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._done = False
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _put(self, batch):
+        if self._sharding is not None:
             return jax.tree_util.tree_map(
-                lambda x: jax.device_put(x, sharding), batch)
+                lambda x: jax.device_put(x, self._sharding), batch)
         return jax.tree_util.tree_map(jax.device_put, batch)
 
-    try:
-        for _ in range(depth):
-            buf.append(put(next(it)))
-    except StopIteration:
-        pass
-    while buf:
-        out = buf.popleft()
+    def _produce(self):
         try:
-            buf.append(put(next(it)))
-        except StopIteration:
-            pass
-        yield out
+            while not self._stop.is_set():
+                # bounded in-flight: wait for a free permit, but keep
+                # checking for close() so shutdown never deadlocks
+                if not self._sem.acquire(timeout=0.1):
+                    continue
+                if self._stop.is_set():
+                    break
+                try:
+                    batch = next(self._it)
+                except StopIteration:
+                    break
+                self._q.put(self._put(batch))
+        except BaseException as e:  # surface on the consumer's stack
+            self._err = e
+        finally:
+            self._q.put(_SENTINEL)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        # blocks ONLY when the buffer is genuinely empty — the stall
+        # MeteredFeed should charge to ingestion
+        item = self._q.get()
+        if item is _SENTINEL:
+            self._done = True
+            self._thread.join()
+            if self._err is not None:
+                err, self._err = self._err, None
+                raise err
+            raise StopIteration
+        self._sem.release()
+        return item
+
+    def close(self, timeout: float = 2.0):
+        """Stop the producer and join it. Idempotent."""
+        if self._on_close is not None:
+            self._on_close()
+        self._stop.set()
+        self._sem.release()  # unblock a producer waiting on a permit
+        self._thread.join(timeout)
+
+
+def device_prefetch(it: Iterator, depth: int = 2, sharding=None):
+    """Yields device-resident batches, keeping `depth` in flight —
+    production happens on a background thread (see DevicePrefetcher)."""
+    return DevicePrefetcher(it, depth=depth, sharding=sharding)
 
 
 class MeteredFeed:
@@ -78,6 +161,11 @@ class MeteredFeed:
                 "stall_s": float(self.stall_s),
                 "time": time.monotonic()}
 
+    def close(self, timeout: float = 2.0):
+        close = getattr(self._it, "close", None)
+        if close is not None:
+            close(timeout)
+
 
 def make_train_feed(pipe, *, depth: int = 2, sharding=None,
                     timeout: float = 60.0) -> MeteredFeed:
@@ -86,18 +174,53 @@ def make_train_feed(pipe, *, depth: int = 2, sharding=None,
     `device_prefetch` (depth batches resident on device, transfer
     overlapped with compute) into a `MeteredFeed` (stall accounting at
     the boundary). The returned iterator is what the train loop consumes
-    and what FeedBackend meters."""
+    and what FeedBackend meters; `feed.close()` stops the producer
+    thread cleanly (call it before `pipe.shutdown()`)."""
+    stop = threading.Event()
+
     def batches():
-        while True:
-            yield pipe.get_batch(timeout=timeout)
-    return MeteredFeed(device_prefetch(batches(), depth=depth,
-                                       sharding=sharding))
+        waited = 0.0
+        while not stop.is_set():
+            try:
+                # short poll so close() can interrupt a blocked pull;
+                # StopIteration from an EOS pipe must not leak out of a
+                # generator (PEP 479) — translate it to a clean return
+                yield pipe.get_batch(timeout=0.25)
+                waited = 0.0
+            except queue.Empty:
+                waited += 0.25
+                if waited >= timeout:
+                    raise
+            except StopIteration:
+                return
+
+    feed = MeteredFeed(DevicePrefetcher(batches(), depth=depth,
+                                        sharding=sharding,
+                                        on_close=stop.set))
+    return feed
 
 
 def shard_slice(batch: dict, host_id: int, n_hosts: int) -> dict:
-    """Host's slice of a global batch (leading dim split)."""
-    def sl(x):
+    """Host's slice of a global batch (leading dim split).
+
+    Raises ShardError when the batch cannot be split exactly — a silent
+    remainder drop (or an empty slice when n < n_hosts) corrupts global
+    batch size downstream where nothing is positioned to notice.
+    """
+    if not 0 <= host_id < n_hosts:
+        raise ShardError(
+            f"host_id {host_id} out of range for {n_hosts} hosts")
+
+    def sl(k, x):
         n = x.shape[0]
+        if n < n_hosts:
+            raise ShardError(
+                f"batch field {k!r} has {n} rows < {n_hosts} hosts: "
+                "every host would receive an empty slice")
+        if n % n_hosts != 0:
+            raise ShardError(
+                f"batch field {k!r} has {n} rows, not divisible by "
+                f"{n_hosts} hosts: {n % n_hosts} rows would be dropped")
         per = n // n_hosts
         return x[host_id * per:(host_id + 1) * per]
-    return {k: sl(v) for k, v in batch.items()}
+    return {k: sl(k, v) for k, v in batch.items()}

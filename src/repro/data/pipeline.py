@@ -25,12 +25,14 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.data.stream import ArrivalProcess
+
 
 @dataclass(frozen=True)
 class StageSpec:
     name: str
-    kind: str                  # "source" | "shuffle" | "udf" | "join" |
-                               # "batch" | "prefetch"
+    kind: str                  # "source" | "stream" | "shuffle" | "udf" |
+                               # "join" | "batch" | "prefetch"
     cost: float                # true CPU-seconds per batch at 1 worker
     serial_frac: float = 0.05  # Amdahl: speedup(a) = 1 / (s + (1-s)/a)
     # what a one-shot profiler *thinks* the cost is (AUTOTUNE's model).
@@ -43,6 +45,11 @@ class StageSpec:
     mem_per_item_mb: float = 0.0
     # DAG edges: names of the stages this one consumes. () = source stage.
     inputs: Tuple[str, ...] = ()
+    # "stream" sources only: the time-varying arrival model backing the
+    # stage. Its service rate becomes min(arrival_rate(t), amdahl_rate) —
+    # the stage cannot process events that have not happened yet — and
+    # un-ingested arrivals accumulate as backlog (data/stream.py).
+    arrival: Optional[ArrivalProcess] = None
 
     def est_cost(self) -> float:
         return self.cost * self.est_bias
@@ -126,6 +133,32 @@ class StageGraph:
                    if i not in topo]
             raise ValueError(f"StageGraph {self.name!r} has a cycle "
                              f"through {cyc}")
+        # streaming-source invariants: a "stream" stage is a source with
+        # an attached ArrivalProcess; at most one per graph (backlog /
+        # staleness accounting is per-graph state in the simulator)
+        streams = []
+        for i, s in enumerate(stages):
+            if s.kind == "stream":
+                if s.arrival is None:
+                    raise ValueError(
+                        f"stream stage {s.name!r} needs an ArrivalProcess "
+                        f"(StageSpec.arrival)")
+                if s.inputs:
+                    raise ValueError(
+                        f"stream stage {s.name!r} must be a source "
+                        f"(inputs=()), got inputs={s.inputs}")
+                streams.append(i)
+            elif s.arrival is not None:
+                raise ValueError(
+                    f"stage {s.name!r} carries an ArrivalProcess but its "
+                    f"kind is {s.kind!r}, not 'stream'")
+        if len(streams) > 1:
+            names = [stages[i].name for i in streams]
+            raise ValueError(f"StageGraph {self.name!r} has multiple "
+                             f"stream sources {names}; at most one is "
+                             f"supported")
+        object.__setattr__(self, "_stream_idx",
+                           streams[0] if streams else None)
         object.__setattr__(self, "_index", index)
         object.__setattr__(self, "_parents", tuple(parents))
         object.__setattr__(self, "_children",
@@ -151,6 +184,12 @@ class StageGraph:
     @property
     def sources(self) -> Tuple[int, ...]:
         return tuple(i for i, s in enumerate(self.stages) if not s.inputs)
+
+    @property
+    def stream_idx(self) -> Optional[int]:
+        """Index of the streaming source stage, or None for the classic
+        infinite-backlog graphs."""
+        return self._stream_idx
 
     @property
     def edges(self) -> Tuple[Tuple[int, int], ...]:
@@ -314,6 +353,39 @@ def multisource_dlrm_pipeline(batch_mb: float = 256.0,
     )
     return StageGraph("multisource_dlrm", stages, batch_mb=batch_mb,
                       target_rate=target_rate, edge_buffer_mb=32.0)
+
+
+def stream_dlrm_pipeline(arrival: ArrivalProcess, *,
+                         batch_mb: float = 64.0,
+                         cost_scale: float = 1.0,
+                         work: str = "spin") -> StageGraph:
+    """Streaming-ingestion chain (benchmarks/fig_stream.py): a broker
+    consumer ingesting live events instead of a disk source reading an
+    infinite backlog.
+
+        ingest(stream) -> decode -> feature_udf -> batch -> prefetch
+
+    The cost profile is deliberately SKEWED toward the UDF (low serial
+    fraction, ~10x the light stages): the even-split heuristic starves
+    feature_udf badly, so its sustainable rate sits far below the
+    water-filled oracle's — exactly the gap a 10x flash crowd exposes.
+    Five stages, so the cached r5 pretrained agent transfers.
+    """
+    c = float(cost_scale)
+    stages = (
+        StageSpec("ingest", "stream", cost=0.04 * c, serial_frac=0.05,
+                  mem_per_worker_mb=48, arrival=arrival),
+        StageSpec("decode", "udf", cost=0.05 * c, serial_frac=0.05,
+                  mem_per_worker_mb=32),
+        StageSpec("feature_udf", "udf", cost=0.50 * c, serial_frac=0.02,
+                  est_bias=0.15, mem_per_worker_mb=64),
+        StageSpec("batch", "batch", cost=0.05 * c, serial_frac=0.10,
+                  mem_per_worker_mb=32),
+        StageSpec("prefetch", "prefetch", cost=0.03 * c, serial_frac=0.05,
+                  mem_per_worker_mb=16, mem_per_item_mb=batch_mb),
+    )
+    return StageGraph("stream_dlrm", stages, batch_mb=batch_mb,
+                      target_rate=arrival.batches_per_sec(0.0), work=work)
 
 
 def make_pipeline(n_stages: int, seed: int = 0, batch_mb: float = 256.0,

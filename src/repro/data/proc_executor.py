@@ -69,6 +69,15 @@ class _Stop:
     identity checks don't survive — compare with isinstance."""
 
 
+class _Skip:
+    """Worker-local "nothing to emit this cycle" sentinel (a rate-limited
+    stream source polling ahead of the arrival curve). Never crosses a
+    process boundary: the worker loop consumes it in place."""
+
+
+_SKIP = _Skip()
+
+
 def read_rss_mb(pid: int) -> Optional[float]:
     """Measured private resident memory of one process in MB (USS:
     private clean + private dirty), best effort.
@@ -347,19 +356,71 @@ class SpinWork:
         return out
 
 
+class StreamSourceWork(SpinWork):
+    """A rate-limited source: emits batch k only once the shared arrival
+    curve says k batches have arrived — the process-plane realization of
+    the sim's `min(arrival_rate(t), amdahl_rate)` service cap.
+
+    The token bucket is a shared counter (`emitted`) claimed under its
+    lock against `arrival.batches_before(now)`, where `now` is stream
+    time measured from the pipeline's shared start stamp (`t0`,
+    CLOCK_MONOTONIC is system-wide, so every worker reads the same
+    clock). A worker that finds no token sleeps briefly and returns
+    `_SKIP`; one that claims a token pays the stage's full SpinWork cost
+    (serialized section included), so capacity still follows the Amdahl
+    curve when arrivals outpace it.
+
+    Until `attach_stream` is called the work degrades to a plain
+    unthrottled source (so the fns dict stays usable outside
+    ProcessPipeline)."""
+
+    def __init__(self, cost: float, serial_frac: float = 0.0,
+                 ballast_mb: float = 0.0, arrival=None):
+        super().__init__(cost, serial_frac, ballast_mb, kind="source")
+        self.arrival = arrival
+        self._emitted = None
+        self._t0 = None
+
+    def attach_stream(self, emitted, t0):
+        """Parent-side wiring before fork/spawn: the shared token counter
+        and the pipeline's stream-epoch stamp."""
+        self._emitted = emitted
+        self._t0 = t0
+
+    def __call__(self, *items):
+        if self.arrival is None or self._emitted is None:
+            return super().__call__(*items)
+        now = time.monotonic() - self._t0.value
+        with self._emitted.get_lock():
+            if self._emitted.value < self.arrival.batches_before(now):
+                self._emitted.value += 1
+                claimed = True
+            else:
+                claimed = False
+        if not claimed:
+            time.sleep(0.005)     # ahead of the world: wait for arrivals
+            return _SKIP
+        return super().__call__(*items)
+
+
 def spin_stage_fns(spec: StageGraph, *, ballast: bool = True
                    ) -> Dict[str, SpinWork]:
     """SpinWork per stage realizing the spec's true cost, serial_frac,
     and (with `ballast`) per-worker memory footprint — the process-plane
     analog of `live_fleet.synthetic_stage_fns`, with physics instead of
-    sleeps."""
+    sleeps. A stage carrying an `arrival` model becomes a rate-limited
+    StreamSourceWork."""
     fns: Dict[str, SpinWork] = {}
     for st in spec.stages:
+        mem = st.mem_per_worker_mb if ballast else 0.0
+        if getattr(st, "arrival", None) is not None:
+            fns[st.name] = StreamSourceWork(
+                st.cost, st.serial_frac, ballast_mb=mem, arrival=st.arrival)
+            continue
         kind = "source" if not st.inputs \
             else ("join" if len(st.inputs) > 1 else "map")
         fns[st.name] = SpinWork(
-            st.cost, st.serial_frac,
-            ballast_mb=st.mem_per_worker_mb if ballast else 0.0, kind=kind)
+            st.cost, st.serial_frac, ballast_mb=mem, kind=kind)
     return fns
 
 
@@ -495,6 +556,8 @@ def _worker_loop(fn, in_qs, out_qs, soft, hard, stop_sent, gather_lock,
             if stop_sent.is_set():          # a sibling hit EOS
                 return
             out = fn()
+            if isinstance(out, _Skip):      # rate-limited: no arrival yet
+                continue
             if out is None:
                 _send_stop(stop_sent, out_qs, hard, gate)
                 return
@@ -741,6 +804,22 @@ class ProcessPipeline:
         self._eos = False
         self._hard_stop = ctx.Event()
         self._rss_baseline: Dict[int, float] = {}
+        self._last_resize_at = 0.0
+        # streaming source wiring: shared token counter + stream epoch,
+        # attached parent-side so every forked/spawned worker claims
+        # against the same arrival curve
+        self._stream_arrival = None
+        self._stream_emitted = None
+        self._stream_t0 = None
+        for st in spec.stages:
+            fn = fns[st.name]
+            if getattr(st, "arrival", None) is not None \
+                    and hasattr(fn, "attach_stream"):
+                self._stream_arrival = st.arrival
+                self._stream_emitted = ctx.Value("L", 0)
+                self._stream_t0 = ctx.Value("d", time.monotonic())
+                fn.attach_stream(self._stream_emitted, self._stream_t0)
+                break                       # StageGraph enforces <= 1
         self.pools: List[_ProcStagePool] = []
         for i, st in enumerate(spec.stages):
             in_qs = [self.edge_queues[(p, i)] for p in spec.parents(i)]
@@ -796,10 +875,15 @@ class ProcessPipeline:
         return [p.n_workers for p in self.pools]
 
     def set_allocation(self, workers, prefetch_mb: float):
+        before = self.worker_counts()
         for pool, w in zip(self.pools, workers):
             pool.resize(int(w))
         self.prefetch_mb = float(prefetch_mb)
         self._out_depth.value = self._prefetch_depth()
+        if self.worker_counts() != before:
+            # fresh workers self-calibrate for ~0.2s before producing;
+            # measure() uses this stamp to flag the settling window
+            self._last_resize_at = time.monotonic()
 
     @property
     def prefetch_depth(self) -> int:
@@ -808,6 +892,20 @@ class ProcessPipeline:
     def rss_mb(self) -> float:
         """Measured resident MB summed over the worker processes, now."""
         return self._sampler.sample()
+
+    def stream_state(self) -> Optional[dict]:
+        """Exact stream accounting, or None for non-stream graphs:
+        arrivals is the arrival curve's integral at stream time `t`,
+        emitted the tokens claimed by source workers, backlog their gap
+        (batches that have arrived but not yet entered the pipeline)."""
+        if self._stream_arrival is None:
+            return None
+        t = time.monotonic() - self._stream_t0.value
+        arrivals = self._stream_arrival.batches_before(t)
+        emitted = float(self._stream_emitted.value)
+        return {"t": t, "arrivals": arrivals, "emitted": emitted,
+                "backlog": max(0.0, arrivals - emitted),
+                "arrival_rate": self._stream_arrival.batches_per_sec(t)}
 
     def stats(self) -> dict:
         for p in self.pools:
@@ -827,7 +925,12 @@ class ProcessPipeline:
         # per tick on the driver's hot path — the OOM judge calls
         # rss_mb() when it needs a fresh verdict
         rss = self._sampler.rss_mb
+        stream = self.stream_state()
+        extra = {} if stream is None else {
+            "backlog_items": stream["backlog"],
+            "arrival_rate": stream["arrival_rate"]}
         return {
+            **extra,
             "throughput": self.out_meter.rate,
             "stage_rate": rates,
             "stage_latency": lat,
@@ -849,7 +952,8 @@ class ProcessPipeline:
         shared cross-process counter)."""
         return {"delivered": self.pools[self.spec.sink].delivered(),
                 "consumed": self.out_meter.count,
-                "time": time.monotonic()}
+                "time": time.monotonic(),
+                "last_resize_at": self._last_resize_at}
 
     window_rate = staticmethod(ThreadedPipeline.window_rate)
 

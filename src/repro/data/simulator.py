@@ -21,6 +21,7 @@ Semantics shared by every optimizer under test (level playing field):
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
@@ -65,11 +66,24 @@ def graph_memory_mb(spec: PipelineSpec, workers, prefetch_mb: float) -> float:
 
 
 class PipelineSim:
-    """Analytic pipeline simulator with OOM + resize dynamics."""
+    """Analytic pipeline simulator with OOM + resize dynamics.
+
+    Streaming graphs (a `StageSpec` with kind="stream" carrying an
+    `ArrivalProcess`) add a world clock: each `apply` tick spans `tick_s`
+    stream-seconds, arrivals are the exact integral of the arrival curve
+    over the tick, and the stream source's service rate is capped at
+    what is actually available — `(backlog + arrivals) / tick_s`. What
+    the pipeline cannot drain accumulates as backlog (batches), charged
+    to memory at the arrival model's `buffer_mb_per_batch` (so an
+    undersized allocation can OOM on backlog growth) and reported as the
+    freshness metrics `backlog_items` / `batch_staleness_s` /
+    `p99_queue_delay_s`. Non-stream graphs take none of these paths —
+    their tick dicts (and golden files) are unchanged.
+    """
 
     def __init__(self, spec: PipelineSpec, machine: MachineSpec,
                  model_latency: float = 0.0, seed: int = 0,
-                 obs_noise: float = 0.02):
+                 obs_noise: float = 0.02, tick_s: float = 1.0):
         self.spec = spec
         self.machine = machine
         self.model_latency = model_latency
@@ -78,14 +92,46 @@ class PipelineSim:
         self.oom_count = 0
         self.restart_left = 0
         self.time = 0
+        # streaming state (inert for non-stream specs)
+        self.tick_s = float(tick_s)
+        self.stream_clock = 0.0        # stream-seconds elapsed
+        self.backlog = 0.0             # batches arrived but not drained
+        self.shed_total = 0.0          # batches dropped at the buffer cap
+        self._stale = 0.0
+        self._delay_win: deque = deque(maxlen=100)
+
+    # ----------------------------------------------------------- stream ---
+    @property
+    def _stream(self):
+        i = getattr(self.spec, "stream_idx", None)
+        return None if i is None else self.spec.stages[i].arrival
+
+    def _arrivals_now(self) -> float:
+        """Batches arriving during the CURRENT tick's stream window
+        [stream_clock, stream_clock + tick_s) — exact integral."""
+        arr = self._stream
+        if arr is None:
+            return 0.0
+        return arr.batches_between(self.stream_clock,
+                                   self.stream_clock + self.tick_s)
 
     # ------------------------------------------------------------ model ---
-    def stage_rates(self, alloc: Allocation) -> np.ndarray:
+    def stage_rates(self, alloc: Allocation, *,
+                    stream_capped: bool = True) -> np.ndarray:
         """Per-stage service rate (what the stage could process given its
-        workers, were its inputs never the constraint)."""
-        return np.array([
+        workers, were its inputs never the constraint). For a streaming
+        source the rate is additionally capped by availability —
+        `min(amdahl_rate, (backlog + arrivals)/tick_s)`; pass
+        `stream_capped=False` for pure capacity planning (the oracle
+        water-fills on capacity, not on today's traffic)."""
+        rates = np.array([
             stage_throughput(st, int(w))
             for st, w in zip(self.spec.stages, alloc.workers)])
+        idx = getattr(self.spec, "stream_idx", None)
+        if idx is not None and stream_capped:
+            avail = (self.backlog + self._arrivals_now()) / self.tick_s
+            rates[idx] = min(rates[idx], avail)
+        return rates
 
     def sustained_rates(self, alloc: Allocation) -> np.ndarray:
         """Per-stage sustained rate over the DAG in topological order: a
@@ -126,25 +172,64 @@ class PipelineSim:
     def apply(self, alloc: Allocation) -> dict:
         """Advance one tick under `alloc`. Returns metrics for the tick."""
         self.time += 1
+        arrivals = self._arrivals_now()
         mem = self.memory_used(alloc)
+        arr = self._stream
+        if arr is not None and arr.buffer_mb_per_batch > 0:
+            # backlogged batches live in the ingest buffer — an undersized
+            # allocation OOMs on backlog growth, not just static footprint
+            mem += (self.backlog + arrivals) * arr.buffer_mb_per_batch
         used_cpus = int(np.sum(alloc.workers))
         if self.restart_left > 0:
             self.restart_left -= 1
-            return {"throughput": 0.0, "mem_mb": mem, "oom": False,
-                    "restarting": True, "used_cpus": used_cpus}
+            out = {"throughput": 0.0, "mem_mb": mem, "oom": False,
+                   "restarting": True, "used_cpus": used_cpus}
+            return self._finish_tick(out, arrivals, drained=0.0)
         if mem > self.machine.mem_mb:
             self.oom_count += 1
             self.restart_left = OOM_RESTART_TICKS
-            return {"throughput": 0.0, "mem_mb": mem, "oom": True,
-                    "restarting": True, "used_cpus": used_cpus}
+            out = {"throughput": 0.0, "mem_mb": mem, "oom": True,
+                   "restarting": True, "used_cpus": used_cpus}
+            return self._finish_tick(out, arrivals, drained=0.0)
         if used_cpus > self.machine.n_cpus:
             # over-subscription: everyone slows down proportionally
             scale = self.machine.n_cpus / used_cpus
             tput = self.throughput(alloc) * scale
         else:
             tput = self.throughput(alloc)
-        return {"throughput": tput, "mem_mb": mem, "oom": False,
-                "restarting": False, "used_cpus": used_cpus}
+        out = {"throughput": tput, "mem_mb": mem, "oom": False,
+               "restarting": False, "used_cpus": used_cpus}
+        return self._finish_tick(out, arrivals, drained=tput * self.tick_s)
+
+    def _finish_tick(self, out: dict, arrivals: float, drained: float) -> dict:
+        """Stream bookkeeping at end of tick: backlog accrues (even while
+        restarting — the world does not pause for an OOM), retention cap
+        sheds, staleness = backlog drain time at the current rate, p99 over
+        a sliding window. No-op (dict untouched) for non-stream specs, so
+        golden files stay byte-identical."""
+        arr = self._stream
+        if arr is None:
+            return out
+        self.backlog = max(0.0, self.backlog + arrivals - drained)
+        if arr.buffer_cap_batches is not None and \
+                self.backlog > arr.buffer_cap_batches:
+            self.shed_total += self.backlog - arr.buffer_cap_batches
+            self.backlog = float(arr.buffer_cap_batches)
+        rate = drained / self.tick_s
+        if rate > 1e-9:
+            self._stale = self.backlog / rate
+        elif self.backlog > 1e-9:
+            self._stale += self.tick_s   # stalled with work queued: ages
+        else:
+            self._stale = 0.0
+        self._delay_win.append(self._stale)
+        out["backlog_items"] = float(self.backlog)
+        out["batch_staleness_s"] = float(self._stale)
+        out["p99_queue_delay_s"] = float(np.percentile(self._delay_win, 99.0))
+        out["arrival_rate"] = arrivals / self.tick_s
+        out["shed_batches"] = float(self.shed_total)
+        self.stream_clock += self.tick_s
+        return out
 
     def resize(self, n_cpus: int):
         self.machine = dataclasses.replace(self.machine, n_cpus=n_cpus)
@@ -163,7 +248,10 @@ class PipelineSim:
         # leave a little memory headroom; prefetch sized to depth 2
         alloc = Allocation(workers, prefetch_mb=2 * self.spec.batch_mb)
         for _ in range(n - self.spec.n_stages):
-            rates = self.stage_rates(alloc)
+            # capacity planning: water-fill on UNCAPPED service rates — a
+            # traffic-capped stream source would otherwise stay the argmin
+            # forever and soak up every CPU
+            rates = self.stage_rates(alloc, stream_capped=False)
             i = int(np.argmin(rates))
             trial = alloc.copy()
             trial.workers[i] += 1
@@ -171,7 +259,8 @@ class PipelineSim:
                 break
             alloc = trial
             if self.model_latency > 0 and \
-                    np.min(self.stage_rates(alloc)) >= 1 / self.model_latency:
+                    np.min(self.stage_rates(alloc, stream_capped=False)) \
+                    >= 1 / self.model_latency:
                 break
         return alloc, self.throughput(alloc)
 

@@ -1,13 +1,23 @@
 """data/device_feed.py: prefetch depth/ordering/draining, shard math,
 stall metering, and the proc->device bridge composition (fake pipe —
 no processes forked here; the live path is tests/test_featurize.py)."""
+import queue
 import time
 
 import numpy as np
 import pytest
 
-from repro.data.device_feed import (MeteredFeed, device_prefetch,
+from repro.data.device_feed import (MeteredFeed, ShardError, device_prefetch,
                                     make_train_feed, shard_slice)
+
+
+def _wait_until(pred, deadline_s=2.0):
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > deadline_s:
+            return False
+        time.sleep(0.005)
+    return True
 
 
 # ------------------------------------------------------ device_prefetch --
@@ -18,9 +28,11 @@ def test_prefetch_preserves_order_and_count():
 
 
 def test_prefetch_keeps_depth_in_flight():
-    """After the consumer pulls item k, the source must have been
-    advanced exactly depth items ahead (transfer overlapped with
-    compute — the whole point of the double buffer)."""
+    """After the consumer pulls item k, the background producer must
+    advance the source to exactly depth items ahead — no more (the
+    semaphore bounds in-flight), and eventually no fewer (production is
+    asynchronous, so we poll with a deadline rather than assert
+    synchronously)."""
     pulled = []
 
     def src():
@@ -30,10 +42,67 @@ def test_prefetch_keeps_depth_in_flight():
 
     it = device_prefetch(src(), depth=3)
     next(it)
-    # one yielded + 3 in the buffer
+    # one yielded + 3 in the buffer, eventually; never past 4
+    assert _wait_until(lambda: len(pulled) == 4)
+    time.sleep(0.05)
     assert len(pulled) == 4
     next(it)
+    assert _wait_until(lambda: len(pulled) == 5)
+    time.sleep(0.05)
     assert len(pulled) == 5
+    it.close()
+
+
+def test_prefetch_hides_jittery_producer():
+    """THE regression for the ISSUE 7 prefetch bugfix: with a producer
+    whose mean rate beats consumption but whose latency is spiky, a
+    depth-2 buffer must absorb the spikes — near-zero stall at the
+    metered boundary. The old generator version pulled synchronously
+    inside the consumer's `next()`, so every producer hiccup landed in
+    `stall_s` verbatim regardless of depth."""
+    def jittery():
+        for i in range(16):
+            if i and i % 4 == 0:
+                time.sleep(0.06)   # spike; mean cost/item = 0.015s
+            yield i
+
+    feed = MeteredFeed(device_prefetch(jittery(), depth=2))
+    out = []
+    for x in feed:
+        out.append(int(np.asarray(x)))
+        time.sleep(0.03)           # consumer slower than the MEAN producer
+    assert out == list(range(16))
+    # 3 spikes x 0.06s would be ~0.18s stall through the broken
+    # prefetcher; the real one hides them behind the buffer
+    assert feed.counters()["stall_s"] < 0.06
+
+
+def test_prefetch_close_joins_producer():
+    """close() must stop a producer that still has items upstream, even
+    one blocked waiting for a permit."""
+    def endless():
+        i = 0
+        while True:
+            yield i
+            i += 1
+
+    it = device_prefetch(endless(), depth=2)
+    assert int(np.asarray(next(it))) == 0
+    it.close()
+    assert not it._thread.is_alive()
+    it.close()   # idempotent
+
+
+def test_prefetch_propagates_producer_error():
+    def boom():
+        yield 1
+        raise RuntimeError("upstream died")
+
+    it = device_prefetch(boom(), depth=2)
+    assert int(np.asarray(next(it))) == 1
+    with pytest.raises(RuntimeError, match="upstream died"):
+        for _ in it:
+            pass
 
 
 def test_prefetch_drains_short_and_empty_iterators():
@@ -73,14 +142,26 @@ def test_shard_slice_even_split():
     assert s3["y"].shape == (2, 2)
 
 
-def test_shard_slice_remainder_dropped_consistently():
-    """n not divisible by n_hosts: every host gets floor(n/n_hosts) rows
-    and the tail remainder is dropped (no host sees a ragged batch)."""
+def test_shard_slice_indivisible_raises():
+    """n not divisible by n_hosts used to silently drop the remainder
+    rows; it is now a named error (global batch size corruption is not
+    a thing to paper over)."""
     batch = {"x": np.arange(10)}
-    sizes = [shard_slice(batch, h, 3)["x"].shape[0] for h in range(3)]
-    assert sizes == [3, 3, 3]
-    seen = np.concatenate([shard_slice(batch, h, 3)["x"] for h in range(3)])
-    np.testing.assert_array_equal(seen, np.arange(9))   # 9 dropped
+    with pytest.raises(ShardError, match="not divisible"):
+        shard_slice(batch, 0, 3)
+
+
+def test_shard_slice_fewer_rows_than_hosts_raises():
+    """n < n_hosts used to hand every host an empty slice."""
+    batch = {"x": np.arange(2)}
+    with pytest.raises(ShardError, match="empty slice"):
+        shard_slice(batch, 0, 4)
+
+
+def test_shard_slice_bad_host_id_raises():
+    batch = {"x": np.arange(8)}
+    with pytest.raises(ShardError, match="out of range"):
+        shard_slice(batch, 4, 4)
 
 
 def test_shard_slice_single_host_identity():
@@ -143,12 +224,53 @@ def test_make_train_feed_composes_bridge():
     assert isinstance(feed, MeteredFeed)
     b0 = next(feed)
     np.testing.assert_array_equal(np.asarray(b0["x"]), np.zeros(4))
-    # depth batches in flight beyond the one consumed
-    assert pipe.i == 3
-    assert set(pipe.timeouts) == {33.0}
+    # depth batches in flight beyond the one consumed (async producer)
+    assert _wait_until(lambda: pipe.i == 3)
+    # get_batch is pulled on a short poll so feed.close() can interrupt
+    assert all(t <= 33.0 for t in pipe.timeouts)
     b1 = next(feed)
     np.testing.assert_array_equal(np.asarray(b1["x"]), np.ones(4))
     assert feed.counters()["batches"] == 2.0
+    feed.close()
+
+
+def test_make_train_feed_timeout_raises_empty():
+    class _StarvedPipe:
+        def get_batch(self, timeout=10.0):
+            time.sleep(timeout)
+            raise queue.Empty
+
+    feed = make_train_feed(_StarvedPipe(), depth=2, timeout=0.5)
+    with pytest.raises(queue.Empty):
+        next(feed)
+
+
+def test_make_train_feed_close_stops_producer():
+    pipe = _FakePipe()
+    feed = make_train_feed(pipe, depth=2)
+    next(feed)
+    feed.close()
+    pulled = pipe.i
+    time.sleep(0.1)
+    assert pipe.i == pulled   # producer really stopped
+
+
+def test_make_train_feed_pipe_eos_is_clean_stop():
+    """pipe.get_batch raising StopIteration (EOS sentinel) inside the
+    producer generator must surface as normal iterator exhaustion, not
+    PEP 479's RuntimeError."""
+    class _EosPipe:
+        def __init__(self):
+            self.i = 0
+
+        def get_batch(self, timeout=10.0):
+            if self.i >= 3:
+                raise StopIteration
+            self.i += 1
+            return {"x": np.full((2,), self.i)}
+
+    feed = make_train_feed(_EosPipe(), depth=2)
+    assert len(list(feed)) == 3
 
 
 # -------------------------------------------------- FeedBackend (stubbed) --
