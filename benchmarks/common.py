@@ -82,6 +82,19 @@ def make_fleet_coordinator(cluster, *, seed: int = 0, head: str = "factored",
                             head=head, finetune_ticks=finetune_ticks, **kw)
 
 
+def make_pool_market(market, *, seed: int = 0, head: str = "factored",
+                     finetune_ticks: int = 150, **kw):
+    """Benchmark-grade PoolMarket ("coordinator + market"): per-job
+    FleetCoordinators, one cached pretrained agent per distinct pipeline
+    length across the whole market."""
+    from repro.core.fleet_coordinator import PoolMarket
+    lengths = sorted({t.pipeline.n_stages for t in market.trainers})
+    pretrained = {n: get_agent_state(n, head=head) for n in lengths}
+    return PoolMarket(market, inner="fleet_intune", pretrained=pretrained,
+                      seed=seed, head=head, finetune_ticks=finetune_ticks,
+                      **kw)
+
+
 def make_tuner(spec, machine, *, seed: int = 0, head: str = "factored",
                finetune_ticks: int = 250, **kw) -> InTune:
     """Benchmark-grade InTune: pretrained (cached) agent for this length."""

@@ -11,10 +11,11 @@ from repro.api.backend import Backend, BackendBase, UnsupportedEventError
 from repro.api.backends import (ControllerBackend, DialectBackend,
                                 ExecutorBackend, FeedBackend,
                                 FleetSimBackend, LiveFleetBackend,
-                                ProcessBackend, SimBackend, as_backend)
+                                ProcessBackend, ProcFleetBackend,
+                                SimBackend, as_backend)
 from repro.api.constants import OOM_RESTART_TICKS, RELAUNCH_TICKS
 from repro.api.events import (ChurnEvent, DeadWindow, Event, ResizeEvent,
-                              churn_events, resize_events)
+                              churn_events, job_churn_events, resize_events)
 from repro.api.registry import BACKENDS, make_backend, tune
 from repro.api.session import FrozenPolicy, Session
 from repro.api.telemetry import RunResult, Telemetry
@@ -25,10 +26,10 @@ __all__ = [
     "Backend", "BackendBase", "UnsupportedEventError",
     "ControllerBackend", "DialectBackend", "ExecutorBackend",
     "FeedBackend", "FleetSimBackend", "LiveFleetBackend", "ProcessBackend",
-    "SimBackend", "as_backend",
+    "ProcFleetBackend", "SimBackend", "as_backend",
     "OOM_RESTART_TICKS", "RELAUNCH_TICKS",
     "ChurnEvent", "DeadWindow", "Event", "ResizeEvent",
-    "churn_events", "resize_events",
+    "churn_events", "job_churn_events", "resize_events",
     "BACKENDS", "make_backend", "tune",
     "FrozenPolicy", "Session", "RunResult", "Telemetry",
     "AllocationError", "validate_allocation", "validate_fleet_allocation",

@@ -362,11 +362,11 @@ class ProcessBackend(_SingleRigBackend):
         """Freshness fields from the pipe's exact stream accounting
         (arrivals - emitted); {} for non-stream graphs. Staleness is the
         backlog's drain time at the measured rate; while fully stalled
-        with work queued it ages by the wall window instead. NOTE: a
-        relaunch after an RSS OOM restarts the stream epoch (the new
-        process's arrival clock starts at zero) — the sim retains
-        backlog across its restart window; DESIGN.md §11 records the
-        gap."""
+        with work queued it ages by the wall window instead. A relaunch
+        after an RSS OOM RESUMES the stream epoch (RigSlot carries
+        `stream_epoch()` across the kill and the fresh pipe adopts it),
+        so backlog keeps accruing through the dead window exactly as the
+        sim retains it across its restart window."""
         state = getattr(self._slot.rig.pipe, "stream_state", lambda: None)()
         if state is None:
             return {}
@@ -635,6 +635,26 @@ class LiveFleetBackend(_FleetAdapter):
             from repro.data.live_fleet import LiveFleet
             fleet = LiveFleet(cluster, seed=seed, window_s=window_s,
                               queue_depth=queue_depth)
+        super().__init__(fleet)
+
+    def _do_shutdown(self) -> Dict[str, Any]:
+        return self.inner.close()
+
+
+class ProcFleetBackend(_FleetAdapter):
+    """The process-plane fleet (ProcFleet: one ProcessPipeline per
+    trainer, real CPU contention, measured-RSS OOM) behind the protocol;
+    `shutdown()` returns its drop/leak accounting."""
+
+    def __init__(self, cluster: Optional[ClusterSpec] = None, *,
+                 seed: int = 0, window_s: float = 0.1,
+                 queue_depth: int = 8, ballast: bool = True,
+                 rss_interval: float = 0.2, fleet=None):
+        if fleet is None:
+            from repro.data.live_fleet import ProcFleet
+            fleet = ProcFleet(cluster, seed=seed, window_s=window_s,
+                              queue_depth=queue_depth, ballast=ballast,
+                              rss_interval=rss_interval)
         super().__init__(fleet)
 
     def _do_shutdown(self) -> Dict[str, Any]:

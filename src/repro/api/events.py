@@ -72,3 +72,21 @@ def churn_events(events: Sequence) -> List[ChurnEvent]:
     schedule) into injectable ChurnEvents."""
     return [ChurnEvent(ev.tick, ev.kind, ev.trainer, ev.n_cpus)
             for ev in events]
+
+
+def job_churn_events(market,
+                     schedule: Iterable[Tuple[int, str, str]]
+                     ) -> List[ChurnEvent]:
+    """JOB-level churn for a MarketSpec: each (tick, kind, job) entry —
+    a whole training job joining or leaving the cluster — expands to one
+    ChurnEvent per member trainer (spec order within the tick). `market`
+    is duck-typed: anything with `job(name).trainers` works, so this
+    module stays free of data-plane imports."""
+    out: List[ChurnEvent] = []
+    for tick, kind, job in schedule:
+        if kind not in ("join", "leave"):
+            raise ValueError(
+                f"job-level churn is join/leave only, got {kind!r}")
+        for t in market.job(job).trainers:
+            out.append(ChurnEvent(int(tick), kind, t))
+    return out

@@ -22,7 +22,7 @@ from typing import Optional
 from repro.api.backend import Backend
 from repro.api.backends import (ExecutorBackend, FleetSimBackend,
                                 LiveFleetBackend, ProcessBackend,
-                                SimBackend)
+                                ProcFleetBackend, SimBackend)
 from repro.api.session import Session
 from repro.api.telemetry import RunResult
 from repro.data.fleet import ClusterSpec
@@ -36,6 +36,7 @@ BACKENDS = {
     ("single", "proc"): ProcessBackend,
     ("fleet", "sim"): FleetSimBackend,
     ("fleet", "live"): LiveFleetBackend,
+    ("fleet", "proc"): ProcFleetBackend,
 }
 _ALIASES = {"executor": "live", "process": "proc"}
 

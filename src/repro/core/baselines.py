@@ -231,9 +231,124 @@ def fleet_oracle(cluster, state, seed: int = 0):
     return FleetAllocation(allocs, grants)
 
 
+# ---------------------------------------------------------------------------
+# Market layer (multi-job pool auction). A MarketSpec partitions the
+# trainers into jobs with bid weights and anti-starvation floors; the
+# auction below is the pricing rule PoolMarket
+# (repro.core.fleet_coordinator) and the market baselines share.
+# ---------------------------------------------------------------------------
+
+def _job_partition(cluster, state):
+    """[(job name, weight, floor, [active member names])] for every job
+    with at least one active member, in spec (jobs) order. A plain
+    ClusterSpec — or a MarketSpec with `jobs=()` — makes every trainer
+    its own weight-1, floor-0 job, under which the market degrades to
+    exactly the per-trainer greedy arbiter (`fleet_oracle`)."""
+    jobs = getattr(cluster, "jobs", ()) or ()
+    if not jobs:
+        return [(n, 1.0, 0, [n]) for n in state.active]
+    out = []
+    for j in jobs:
+        members = [n for n in state.active if n in set(j.trainers)]
+        if members:
+            out.append((j.name, j.weight, j.floor, members))
+    return out
+
+
+def market_grants(cluster, state) -> dict:
+    """Cross-job marginal-throughput pricing: per-trainer pool grants.
+
+    Two passes. FLOORS first: every active job is owed min(floor,
+    remaining pool) cores unconditionally (anti-starvation), each core
+    placed at the job's own best-marginal member. Then the AUCTION: each
+    remaining core goes to the job with the highest bid
+    `weight * (best member's marginal oracle throughput for +1 cap)`,
+    granted to that member. Per-member rates are concave, so within a
+    job the greedy placement is optimal; across jobs the weights price
+    priority. Deterministic: jobs bid in spec order, members in active
+    order, strict > to dethrone — so equal bids resolve to the earlier
+    job/member and a re-run of the same state reproduces the same grants
+    (the re-auction idempotence the property suite pins)."""
+    jobs = _job_partition(cluster, state)
+    grants = {n: 0 for n in state.active}
+
+    def best_marginal(members):
+        best_gain, best_name = -1.0, None
+        for n in members:
+            t = cluster.trainer(n)
+            cap = state.base(n) + grants[n]
+            gain = _oracle_point(t, cap + 1)[1] - _oracle_point(t, cap)[1]
+            if gain > best_gain:
+                best_gain, best_name = gain, n
+        return best_gain, best_name
+
+    pool = int(state.pool)
+    for _, _, floor, members in jobs:
+        for _ in range(min(int(floor), pool)):
+            _, name = best_marginal(members)
+            grants[name] += 1
+            pool -= 1
+    while pool > 0:
+        best_bid, winner = 1e-12, None
+        for _, weight, _, members in jobs:
+            gain, name = best_marginal(members)
+            bid = weight * gain
+            if bid > best_bid:
+                best_bid, winner = bid, name
+        if winner is None:
+            break               # every job saturated: leave pool idle
+        grants[winner] += 1
+        pool -= 1
+    return grants
+
+
+def market_local_oracle(cluster, state, seed: int = 0):
+    """Per-JOB local oracle, no cross-job arbitration: the pool is split
+    evenly across active jobs (blind to weights, floors, and demand),
+    then each job water-fills its share over its own members perfectly.
+    The market analog of `fleet_local_oracle` — what perfect per-job
+    tuning buys when nobody prices the pool across jobs."""
+    from repro.data.fleet import FleetAllocation
+    jobs = _job_partition(cluster, state)
+    grants = {n: 0 for n in state.active}
+    shares = _even_grants(state.pool, [j[0] for j in jobs])
+    for jname, _, _, members in jobs:
+        for _ in range(shares.get(jname, 0)):
+            best_gain, best = 1e-12, None
+            for n in members:
+                t = cluster.trainer(n)
+                cap = state.base(n) + grants[n]
+                gain = _oracle_point(t, cap + 1)[1] \
+                    - _oracle_point(t, cap)[1]
+                if gain > best_gain:
+                    best_gain, best = gain, n
+            if best is None:
+                break           # job saturated: its share goes unused
+            grants[best] += 1
+    allocs = {n: _oracle_point(cluster.trainer(n),
+                               state.base(n) + grants[n])[0]
+              for n in state.active}
+    return FleetAllocation(allocs, grants)
+
+
+def market_oracle(cluster, state, seed: int = 0):
+    """The market reference: weighted cross-job auction grants + the
+    per-machine oracle placement at each granted cap. On a spec without
+    jobs (or uniform weights, zero floors, one job) this reproduces
+    `fleet_oracle` exactly."""
+    from repro.data.fleet import FleetAllocation
+    grants = market_grants(cluster, state)
+    allocs = {n: _oracle_point(cluster.trainer(n),
+                               state.base(n) + grants[n])[0]
+              for n in state.active}
+    return FleetAllocation(allocs, grants)
+
+
 FLEET_BASELINES = {
     "fleet_even": fleet_even,
     "fleet_proportional": fleet_proportional,
     "fleet_local_oracle": fleet_local_oracle,
     "fleet_oracle": fleet_oracle,
+    "market_local_oracle": market_local_oracle,
+    "market_oracle": market_oracle,
 }

@@ -90,7 +90,8 @@ class FleetCoordinator:
                  finetune_ticks: int = 150,
                  rebalance_every: int = 100, rebalance_tol: float = 1.02,
                  mem_headroom: float = 0.95, mem_guard: bool = True,
-                 quarantine_ticks: int = 40):
+                 quarantine_ticks: int = 40,
+                 measure_anchor: bool = False):
         self.cluster = cluster
         self.pretrained = pretrained or {}
         self.seed = seed
@@ -101,6 +102,7 @@ class FleetCoordinator:
         self.mem_headroom = mem_headroom
         self.mem_guard = mem_guard
         self.quarantine_ticks = quarantine_ticks
+        self.measure_anchor = measure_anchor
         self.tuners: Dict[str, InTune] = {}
         self.grants: Dict[str, int] = {}
         self.quarantine: Dict[str, int] = {}
@@ -151,6 +153,18 @@ class FleetCoordinator:
                                trainer.machine.mem_mb, self.mem_headroom)
         tuner.env.set_allocation(safe)
         tuner.obs = tuner.env.observe()
+        if self.measure_anchor:
+            # measure the anchor ITSELF before the eps-walk moves off
+            # it: serve-best picks from MEASURED allocations only, so
+            # without this the planner's point can never be served even
+            # when the walk finds nothing better (the controller's own
+            # launch-tick hold, re-armed for every re-anchor). Off by
+            # default — it shifts the exploration trajectory, and the
+            # single-job coordinator's published runs (fig7) are pinned
+            # on the unheld one; the market turns it on for its per-job
+            # inners, where every budget move re-anchors a machine and
+            # an unmeasured anchor systematically starves serve-best.
+            tuner._hold_first = True
 
     # --------------------------------------------------------- protocol ---
     def propose(self, cluster: ClusterSpec = None,
@@ -245,3 +259,175 @@ class FleetCoordinator:
         for name, s in state["tuners"].items():
             if name in self.tuners:
                 self.tuners[name].load_state_dict(s)
+
+
+class _JobOracle:
+    """Deterministic static per-job inner optimizer: serves the fleet
+    oracle for the job's sub-state, re-fit only when the sub-state
+    churns. The PoolMarket default — cheap (lru-cached oracle curves),
+    seedless, and byte-stable, which is what the golden-trace and
+    property suites want under the market."""
+
+    name = "job_oracle"
+
+    def __init__(self, cluster: ClusterSpec, seed: int = 0):
+        self.cluster = cluster
+        self._key = None
+        self._cached: Optional[FleetAllocation] = None
+
+    def propose(self, cluster=None, state: FleetState = None,
+                stats=None) -> FleetAllocation:
+        if self._cached is None or state.key() != self._key:
+            self._cached = B.fleet_oracle(self.cluster, state)
+            self._key = state.key()
+        return self._cached.copy()
+
+    def observe(self, metrics) -> None:
+        pass
+
+
+class PoolMarket:
+    """The market layer: multiple concurrent training jobs bidding for
+    one shared elastic CPU pool.
+
+    The per-trainer greedy arbiter (`fleet_oracle`) already computes
+    marginal-throughput prices; this lifts it across jobs — each pool
+    core is auctioned to the job with the highest
+    `weight * best-member-marginal` bid (after anti-starvation floors
+    are honored), then each job's budget is handed to that job's OWN
+    inner optimizer as its sub-fleet pool. The inner water-fills (or
+    RL-tunes, with `inner="fleet_intune"`) within the budget, so
+    conservation holds by construction: merged grants never exceed the
+    auctioned budgets, which never exceed the pool.
+
+    Re-auction is churn-safe: budgets are cached on `state.key()` — the
+    auction only re-runs when the fleet state actually changes (job
+    member join/leave, machine resize, pool re-cap) or when a member
+    OOMs (its quarantine reshapes the job's real demand, so the pool is
+    re-priced). Under no churn the auction is idempotent — same state,
+    same grants, no flapping (re-opening a tuning window costs more
+    than a slightly stale split, same reasoning as the coordinator's
+    `rebalance_tol`).
+
+    Speaks the fleet Optimizer protocol, so Session + any fleet backend
+    (FleetSim / LiveFleet / ProcFleet) drive it unchanged.
+    """
+
+    name = "market"
+
+    def __init__(self, market: ClusterSpec, inner: str = "job_oracle",
+                 pretrained: Optional[Dict[int, dict]] = None,
+                 seed: int = 0, **inner_kw):
+        from repro.data.fleet import JobSpec
+        self.market = market
+        jobs = tuple(getattr(market, "jobs", ()) or ())
+        if not jobs:
+            # a job-less spec: every trainer is its own weight-1 job,
+            # and the market degrades to the per-trainer greedy arbiter
+            jobs = tuple(JobSpec(t.name, (t.name,))
+                         for t in market.trainers)
+        self.jobs = jobs
+        self.inner: Dict[str, object] = {}
+        for i, j in enumerate(jobs):
+            sub = ClusterSpec(
+                name=f"{market.name}/{j.name}",
+                trainers=tuple(market.trainer(n) for n in j.trainers),
+                shared_pool=market.shared_pool)
+            if inner == "fleet_intune":
+                # per-job coordinators measure their warm-start anchors:
+                # every auction budget move re-anchors machines, and a
+                # never-measured anchor can't be served (see _warm_start)
+                kw = dict(inner_kw)
+                kw.setdefault("measure_anchor", True)
+                self.inner[j.name] = FleetCoordinator(
+                    sub, pretrained=pretrained, seed=seed + i, **kw)
+            elif inner == "job_oracle":
+                self.inner[j.name] = _JobOracle(sub, seed=seed + i)
+            else:
+                raise ValueError(f"unknown inner optimizer {inner!r}; "
+                                 "known: job_oracle, fleet_intune")
+        self.budgets: Dict[str, int] = {}
+        self.history: list = []
+        self._last_key = None
+        self._force_reauction = False
+
+    # ---------------------------------------------------------- auction ---
+    def _auction(self, state: FleetState) -> Dict[str, int]:
+        """Per-job pool budgets from the weighted marginal-throughput
+        auction; cached on state.key() (see class docstring)."""
+        if (not self.budgets or self._force_reauction
+                or state.key() != self._last_key):
+            grants = B.market_grants(self.market, state)
+            self.budgets = {
+                j.name: sum(grants.get(n, 0) for n in j.trainers)
+                for j in self.jobs}
+            self._last_key = state.key()
+            self._force_reauction = False
+        return self.budgets
+
+    # --------------------------------------------------------- protocol ---
+    def propose(self, cluster: ClusterSpec = None,
+                state: FleetState = None,
+                stats: Optional[dict] = None) -> FleetAllocation:
+        if cluster is not None and cluster is not self.market \
+                and cluster != self.market:
+            raise ValueError("PoolMarket was built for cluster "
+                             f"{self.market.name!r}")
+        assert state is not None, "propose needs the FleetState"
+        budgets = self._auction(state)
+        allocs: Dict[str, Allocation] = {}
+        grants: Dict[str, int] = {}
+        for j in self.jobs:
+            members = tuple(n for n in state.active if n in set(j.trainers))
+            if not members:
+                continue
+            sub_state = FleetState(
+                tick=state.tick, pool=int(budgets.get(j.name, 0)),
+                active=members,
+                base_cpus=tuple((n, state.base(n)) for n in members))
+            fa = self.inner[j.name].propose(None, sub_state, stats)
+            allocs.update(fa.allocs)
+            for n in members:
+                grants[n] = int(fa.grants.get(n, 0))
+        return FleetAllocation(allocs, grants)
+
+    def observe(self, metrics) -> None:
+        per = metrics.get("per_trainer")
+        if per is None:
+            return              # fleet-wide dead window: nothing ran
+        any_oom = False
+        for j in self.jobs:
+            members = set(j.trainers)
+            sub = {n: m for n, m in per.items() if n in members}
+            if not sub:
+                continue
+            oom = any(m.get("oom") for m in sub.values())
+            any_oom = any_oom or oom
+            self.inner[j.name].observe({
+                "per_trainer": sub,
+                "throughput": sum(m["throughput"] for m in sub.values()),
+                "n_active": len(sub),
+                "oom": oom})
+        if any_oom:
+            # OOM-quarantine churn: the killed member's job will serve a
+            # clamped safe point for a while — re-price the pool against
+            # the fleet's real demand next tick
+            self._force_reauction = True
+        self.history.append({
+            "throughput": metrics["throughput"],
+            "oom": metrics.get("oom", False),
+            "budgets": dict(self.budgets)})
+
+    # ------------------------------------------------------ persistence ---
+    def state_dict(self) -> dict:
+        return {"budgets": dict(self.budgets),
+                "inner": {name: opt.state_dict()
+                          for name, opt in self.inner.items()
+                          if hasattr(opt, "state_dict")}}
+
+    def load_state_dict(self, state: dict):
+        self.budgets = dict(state["budgets"])
+        for name, s in state.get("inner", {}).items():
+            if name in self.inner and hasattr(self.inner[name],
+                                              "load_state_dict"):
+                self.inner[name].load_state_dict(s)

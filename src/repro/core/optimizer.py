@@ -129,12 +129,17 @@ class FleetStaticOptimizer:
 
 def make_fleet_optimizer(name: str, cluster, seed: int = 0, **kw):
     """Build any registered fleet policy: "fleet_intune" (the
-    FleetCoordinator) or a fleet baseline from B.FLEET_BASELINES."""
+    FleetCoordinator), "market" (the cross-job PoolMarket; pass
+    `inner="fleet_intune"` for RL-tuned jobs), or a fleet baseline from
+    B.FLEET_BASELINES."""
     if name == "fleet_intune":
         from repro.core.fleet_coordinator import FleetCoordinator
         return FleetCoordinator(cluster, seed=seed, **kw)
+    if name in ("market", "pool_market"):
+        from repro.core.fleet_coordinator import PoolMarket
+        return PoolMarket(cluster, seed=seed, **kw)
     from repro.core import baselines as B
     if name not in B.FLEET_BASELINES:
-        known = ["fleet_intune"] + sorted(B.FLEET_BASELINES)
+        known = ["fleet_intune", "market"] + sorted(B.FLEET_BASELINES)
         raise KeyError(f"unknown fleet optimizer {name!r}; known: {known}")
     return FleetStaticOptimizer(name, B.FLEET_BASELINES[name], seed=seed)

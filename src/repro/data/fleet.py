@@ -289,6 +289,80 @@ class FleetSim(FleetBackend):
                 "per_trainer": per}
 
 
+@dataclass(frozen=True)
+class JobSpec:
+    """One training job bidding in the pool market: a named set of
+    member trainers, a bid weight (its marginal throughput is scaled by
+    `weight` at auction — priority pricing), and an anti-starvation
+    `floor` of pool cores it is owed whenever it has an active member."""
+    name: str
+    trainers: Tuple[str, ...]
+    weight: float = 1.0
+    floor: int = 0
+
+
+@dataclass(frozen=True)
+class MarketSpec(ClusterSpec):
+    """A ClusterSpec whose trainers are partitioned into concurrent
+    JOBS competing for the one shared elastic pool (Zhao et al.'s DSI
+    setting: many training jobs, one ingestion substrate). With
+    `jobs=()` it degrades to a plain ClusterSpec; with jobs, every
+    trainer must belong to exactly one job. `isinstance(spec,
+    ClusterSpec)` holds, so every fleet backend runs a MarketSpec
+    unchanged — jobs only matter to the optimizer layer (PoolMarket)."""
+    jobs: Tuple[JobSpec, ...] = ()
+
+    def __post_init__(self):
+        super().__post_init__()
+        names = {t.name for t in self.trainers}
+        jnames = [j.name for j in self.jobs]
+        if len(set(jnames)) != len(jnames):
+            raise ValueError(f"duplicate job names in {jnames}")
+        seen: Dict[str, str] = {}
+        for j in self.jobs:
+            if j.weight <= 0:
+                raise ValueError(f"job {j.name!r}: weight must be > 0")
+            if j.floor < 0:
+                raise ValueError(f"job {j.name!r}: floor must be >= 0")
+            for t in j.trainers:
+                if t not in names:
+                    raise ValueError(
+                        f"job {j.name!r} names unknown trainer {t!r}")
+                if t in seen:
+                    raise ValueError(
+                        f"trainer {t!r} in jobs {seen[t]!r} and {j.name!r}")
+                seen[t] = j.name
+        if self.jobs and len(seen) != len(names):
+            missing = sorted(names - set(seen))
+            raise ValueError(f"trainers belong to no job: {missing}")
+        if sum(j.floor for j in self.jobs) > self.shared_pool:
+            raise ValueError("job floors exceed the shared pool")
+
+    def job(self, name: str) -> JobSpec:
+        for j in self.jobs:
+            if j.name == name:
+                return j
+        raise KeyError(name)
+
+    def job_of(self, trainer: str) -> Optional[JobSpec]:
+        for j in self.jobs:
+            if trainer in j.trainers:
+                return j
+        return None
+
+
+def job_events(market: MarketSpec, tick: int, kind: str,
+               job: str) -> Tuple[FleetEvent, ...]:
+    """Expand JOB-level churn — a whole job joining or leaving the
+    cluster — into one FleetEvent per member trainer at `tick` (the
+    member events fire in spec order within the tick)."""
+    if kind not in ("join", "leave"):
+        raise ValueError(
+            f"job-level churn is join/leave only, got {kind!r}")
+    return tuple(FleetEvent(tick=tick, kind=kind, trainer=t)
+                 for t in market.job(job).trainers)
+
+
 def churn_schedule(total_ticks: int,
                    events: Sequence[Tuple[float, str, str, int]]
                    ) -> Tuple[FleetEvent, ...]:
@@ -337,3 +411,74 @@ def demo_cluster(ticks: int = 1200, pool: int = 80) -> ClusterSpec:
     ])
     return ClusterSpec("demo_fleet4", trainers, shared_pool=pool,
                        events=events)
+
+
+def big_cluster(n_machines: int = 32, ticks: int = 1200,
+                pool: Optional[int] = None, n_jobs: int = 3,
+                seed: int = 0) -> MarketSpec:
+    """A 32+ machine heterogeneous multi-job cluster (the fig_market
+    scale target): per-machine core-count and socket-speed skew à la
+    NUMA heterogeneity (Kalamkar et al.), three pipeline shapes, varied
+    model demand, memory-tight stragglers, and churn on every axis.
+    Deterministic in `seed` — the spec feeds golden-trace tests.
+
+    Speed skew is realized by scaling every stage's true cost by a
+    per-machine factor in [0.6, 1.5] (a slow socket makes the SAME
+    pipeline more expensive), which also gives each trainer a distinct
+    StageGraph identity for the oracle's cache. Trainers are
+    partitioned round-robin into `n_jobs` jobs with skewed weights
+    (2.0 / 1.0 / 0.5) and small anti-starvation floors.
+    """
+    from repro.data.pipeline import (criteo_pipeline, custom_pipeline,
+                                     multisource_dlrm_pipeline)
+    if n_machines < n_jobs:
+        raise ValueError("need at least one machine per job")
+    rng = np.random.RandomState(seed)
+    makers = (criteo_pipeline, custom_pipeline, multisource_dlrm_pipeline)
+    core_classes = (16, 24, 32, 48, 64, 96)
+    mem_classes = (6144.0, 16384.0, 32768.0, 65536.0)
+    latencies = (0.02, 0.025, 0.04, 0.1, 0.2)
+    trainers = []
+    for i in range(n_machines):
+        base = makers[int(rng.randint(len(makers)))]()
+        speed = float(0.6 + 0.9 * rng.rand())
+        stages = tuple(dataclasses.replace(s, cost=float(s.cost * speed))
+                       for s in base.stages)
+        pipe = base.replace(name=f"{base.name}@m{i:02d}", stages=stages)
+        trainers.append(TrainerSpec(
+            name=f"m{i:02d}", pipeline=pipe,
+            machine=MachineSpec(
+                n_cpus=int(core_classes[rng.randint(len(core_classes))]),
+                mem_mb=float(mem_classes[rng.randint(len(mem_classes))])),
+            model_latency=float(latencies[rng.randint(len(latencies))]),
+            start_active=bool(rng.rand() > 0.15)))
+    owned = sum(t.machine.n_cpus for t in trainers)
+    if pool is None:
+        pool = int(0.25 * owned)
+    jobs = tuple(
+        JobSpec(name=f"job{j}",
+                trainers=tuple(t.name for k, t in enumerate(trainers)
+                               if k % n_jobs == j),
+                weight=float((2.0, 1.0, 0.5)[j % 3]),
+                floor=int((4, 2, 0)[j % 3]))
+        for j in range(n_jobs))
+    sched = []
+    for t in trainers:                      # late joiners arrive mid-run
+        if not t.start_active:
+            sched.append((float(0.15 + 0.5 * rng.rand()), "join",
+                          t.name, 0))
+    active = [t for t in trainers if t.start_active]
+    for t in [active[int(i)] for i in
+              rng.choice(len(active), size=min(3, len(active)),
+                         replace=False)]:
+        sched.append((float(0.30 + 0.40 * rng.rand()), "resize", t.name,
+                      max(8, t.machine.n_cpus // 2)))
+    for t in [active[int(i)] for i in
+              rng.choice(len(active), size=min(3, len(active)),
+                         replace=False)]:
+        sched.append((float(0.55 + 0.35 * rng.rand()), "leave", t.name, 0))
+    sched.append((0.5, "pool", "", int(pool * 0.75)))
+    events = churn_schedule(ticks, sched)
+    return MarketSpec(name=f"big_fleet{n_machines}",
+                      trainers=tuple(trainers), shared_pool=int(pool),
+                      events=events, jobs=jobs)

@@ -182,6 +182,9 @@ class RigSlot:
         self.oom_count = 0
         self.crash_lost = 0
         self.all_joined = True
+        # stream epoch carried across an OOM relaunch (proc plane): the
+        # arrival curve survives the crash — see kill()/tick_dead_window
+        self.carry_epoch = None
 
     @property
     def live(self) -> bool:
@@ -196,6 +199,15 @@ class RigSlot:
         self.restart_left -= 1
         if self.restart_left == 0 and self.rig is None:
             self.rig = self.launch(eff_cpus)
+            if self.carry_epoch is not None:
+                # resume the predecessor's arrival curve: stream time ran
+                # on through the dead window, so the relaunched source
+                # faces the backlog that accrued while it was down —
+                # exactly the simulator's backlog-OOM crash-loop dynamics
+                adopt = getattr(self.rig.pipe, "adopt_stream_epoch", None)
+                if callable(adopt):
+                    adopt(self.carry_epoch)
+                self.carry_epoch = None
         return True
 
     def kill(self):
@@ -204,6 +216,9 @@ class RigSlot:
         self.oom_count += 1
         self.restart_left = OOM_RESTART_TICKS
         if self.rig is not None:
+            epoch = getattr(self.rig.pipe, "stream_epoch", None)
+            if callable(epoch):
+                self.carry_epoch = epoch()
             acct = self.rig.teardown(drain=False)
             self.crash_lost += max(0, acct["delivered"] - acct["consumed"])
             self.all_joined = self.all_joined and acct["joined"]
@@ -225,7 +240,11 @@ class RigSlot:
         return tput * (eff / used) if used > eff else tput
 
     def close(self, drain: bool = True) -> int:
-        """Clean teardown (leave / shutdown); returns dropped batches."""
+        """Clean teardown (leave / shutdown); returns dropped batches.
+        A clean leave forfeits any carried stream epoch — only the OOM
+        kill/relaunch path resumes the curve; an explicit rejoin is a
+        fresh stream."""
+        self.carry_epoch = None
         dropped = 0
         if self.rig is not None:
             acct = self.rig.teardown(drain=drain)
@@ -289,8 +308,10 @@ class LiveFleet(FleetBackend):
     # ----------------------------------------------------------- churn ----
     def _on_join(self, name: str):
         slot = self.slots[name]
-        # a (re)joining machine is a fresh process: no restart debt
+        # a (re)joining machine is a fresh process: no restart debt, and
+        # no stream epoch carried over (an explicit rejoin starts fresh)
         slot.restart_left = 0
+        slot.carry_epoch = None
         if slot.rig is None:
             slot.rig = slot.launch(self._base[name])
 
@@ -300,6 +321,31 @@ class LiveFleet(FleetBackend):
     @property
     def oom_count(self) -> int:
         return sum(s.oom_count for s in self.slots.values())
+
+    # -------------------------------------------- substrate judge hooks ----
+    # The threaded plane enforces the simulator's BUDGET memory model
+    # before the window opens and charges the accounting discount for
+    # over-subscription (sleeps don't contend); the process plane
+    # (ProcFleet) swaps all three hooks for physics — measured RSS after
+    # the window, no discount.
+    def _pre_window_oom(self, trainer: TrainerSpec, slot: RigSlot,
+                        mem: float) -> bool:
+        """Budget-enforced OOM (the simulator's judge, verbatim): kill +
+        OOM_RESTART_TICKS dead window, via the shared RigSlot
+        lifecycle."""
+        return mem > trainer.machine.mem_mb
+
+    def _post_window_judge(self, trainer: TrainerSpec, slot: RigSlot,
+                           mem: float) -> Tuple[float, bool]:
+        """Post-measurement memory verdict: (reported mem_mb, killed).
+        Budget accounting already judged pre-window, so this is a
+        no-op here; ProcFleet samples measured RSS instead."""
+        return mem, False
+
+    def _discount(self, tput: float, used: int, eff: int) -> float:
+        """Sleeps don't contend like real CPUs: charge the sim's
+        proportional over-subscription slowdown in accounting."""
+        return RigSlot.discount(tput, used, eff)
 
     # ------------------------------------------------------------ tick ----
     def apply(self, falloc: FleetAllocation) -> dict:
@@ -324,28 +370,31 @@ class LiveFleet(FleetBackend):
                              "restarting": True, "used_cpus": used,
                              "eff_cpus": eff}
                 continue
-            if mem > trainer.machine.mem_mb:
-                # budget-enforced OOM (the simulator's judge, verbatim):
-                # kill + OOM_RESTART_TICKS dead window, via the shared
-                # RigSlot lifecycle
+            if self._pre_window_oom(trainer, slot, mem):
                 slot.kill()
                 per[name] = {"throughput": 0.0, "mem_mb": mem, "oom": True,
                              "restarting": True, "used_cpus": used,
                              "eff_cpus": eff}
                 continue
             slot.prepare(eff, alloc)
-            measuring.append((name, slot.rig, mem, used, eff))
+            measuring.append((name, trainer, slot, mem, used, eff))
         # one shared measurement window: every allocation above is applied
         # BEFORE any trainer is measured, so pool re-caps and grant moves
         # land atomically across the fleet
-        before = {name: rig.counters() for name, rig, *_ in measuring}
+        before = {name: slot.rig.counters()
+                  for name, _, slot, *_ in measuring}
         if measuring:
             time.sleep(self.window_s)
-        for name, rig, mem, used, eff in measuring:
-            tput = ThreadedPipeline.window_rate(before[name], rig.counters())
-            # sleeps don't contend like real CPUs: charge the sim's
-            # proportional over-subscription slowdown in accounting
-            tput = RigSlot.discount(tput, used, eff)
+        for name, trainer, slot, mem, used, eff in measuring:
+            after = slot.rig.counters()
+            tput = ThreadedPipeline.window_rate(before[name], after)
+            mem, killed = self._post_window_judge(trainer, slot, mem)
+            if killed:
+                per[name] = {"throughput": 0.0, "mem_mb": mem, "oom": True,
+                             "restarting": True, "used_cpus": used,
+                             "eff_cpus": eff}
+                continue
+            tput = self._discount(tput, used, eff)
             per[name] = {"throughput": tput, "mem_mb": mem, "oom": False,
                          "restarting": False, "used_cpus": used,
                          "eff_cpus": eff}
@@ -379,6 +428,70 @@ class LiveFleet(FleetBackend):
 
     def __exit__(self, *exc):
         self.close()
+
+
+class ProcFleet(LiveFleet):
+    """The fleet plane on REAL OS processes: one ProcessPipeline per
+    active trainer via the `_TrainerRig(make_pipe=...)` hook, so every
+    trainer in the fleet runs real CPU-contended burns.
+
+    Everything LiveFleet charges in accounting is physics here, exactly
+    as ProcessBackend vs ExecutorBackend on the single-machine plane:
+
+      - NO over-subscription discount: workers across ALL trainers
+        contend for the same host cores, so over-placing slows the
+        measured rate because silicon actually runs out;
+      - MEMORY is measured, not budgeted: after the shared window each
+        trainer's OOM verdict comes from its pipeline's sampled resident
+        bytes (`rss_mb()`, growth since spawn) against its machine's
+        `mem_mb` — then the same kill + OOM_RESTART_TICKS + relaunch
+        lifecycle as every other plane (the shared RigSlot);
+      - a stream trainer's arrival curve SURVIVES the OOM: RigSlot
+        carries `stream_epoch()` across the kill, so the relaunch
+        resumes (backlog accrued while dead), matching the sim.
+
+    `ballast=False` skips the per-worker memory ballast (cheap CI rigs);
+    leave it True when the RSS OOM judge is under test.
+    """
+
+    def __init__(self, cluster: ClusterSpec, seed: int = 0,
+                 window_s: float = 0.1, queue_depth: int = 8,
+                 ballast: bool = True, rss_interval: float = 0.2):
+        # set before super().__init__ — it launches the start_active rigs
+        self.ballast = ballast
+        self.rss_interval = rss_interval
+        super().__init__(cluster, seed=seed, window_s=window_s,
+                         queue_depth=queue_depth)
+
+    def _make_launch(self, trainer: TrainerSpec):
+        from repro.data.proc_executor import ProcessPipeline, stage_fns_for
+
+        def make_pipe(tr, eff, queue_depth):
+            return ProcessPipeline(
+                tr.pipeline,
+                fns=stage_fns_for(tr.pipeline, ballast=self.ballast),
+                queue_depth=queue_depth,
+                machine=dataclasses.replace(tr.machine, n_cpus=int(eff)),
+                rss_interval=self.rss_interval)
+
+        return lambda eff: _TrainerRig(trainer, eff, self.queue_depth,
+                                       make_pipe=make_pipe)
+
+    # ------------------------------------------- physics over accounting --
+    def _pre_window_oom(self, trainer: TrainerSpec, slot: RigSlot,
+                        mem: float) -> bool:
+        return False               # the RSS judge rules after the window
+
+    def _post_window_judge(self, trainer: TrainerSpec, slot: RigSlot,
+                           mem: float) -> Tuple[float, bool]:
+        rss = slot.rig.pipe.rss_mb()
+        if rss > trainer.machine.mem_mb:
+            slot.kill()
+            return rss, True
+        return rss, False
+
+    def _discount(self, tput: float, used: int, eff: int) -> float:
+        return tput                # contention is physical, already in tput
 
 
 # ---------------------------------------------------------------------------

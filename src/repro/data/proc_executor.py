@@ -907,6 +907,31 @@ class ProcessPipeline:
                 "backlog": max(0.0, arrivals - emitted),
                 "arrival_rate": self._stream_arrival.batches_per_sec(t)}
 
+    def stream_epoch(self) -> Optional[dict]:
+        """The stream's persistent identity: the monotonic t0 anchoring
+        its arrival curve plus the tokens already emitted against it.
+        None for non-stream graphs. A relaunch that adopts this epoch
+        RESUMES the curve — stream time keeps running through the dead
+        window, so backlog accrues while the process is down (the
+        simulator's "the world does not pause for an OOM" contract)."""
+        if self._stream_arrival is None:
+            return None
+        return {"emitted": int(self._stream_emitted.value),
+                "t0": float(self._stream_t0.value)}
+
+    def adopt_stream_epoch(self, epoch: Optional[dict]):
+        """Resume a predecessor's arrival curve instead of starting a
+        fresh one. Must be called before the first tokens are claimed
+        (RigSlot adopts immediately after relaunch). No-op for
+        non-stream graphs or a None epoch."""
+        if self._stream_arrival is None or not epoch:
+            return
+        with self._stream_emitted.get_lock():
+            self._stream_emitted.value = int(epoch["emitted"])
+        # ctx.Value mutations are visible to already-forked workers:
+        # both fields live in shared memory
+        self._stream_t0.value = float(epoch["t0"])
+
     def stats(self) -> dict:
         for p in self.pools:
             p.sync_meter()

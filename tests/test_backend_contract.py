@@ -23,10 +23,11 @@ from repro.data.fleet import ClusterSpec, TrainerSpec
 from repro.data.live_fleet import live_linear_pipeline
 from repro.data.simulator import Allocation, MachineSpec
 
-BACKENDS = ["sim", "executor", "proc", "fleet_sim", "fleet_live"]
-FLEET = {"fleet_sim", "fleet_live"}
-SEEDED = {"sim", "fleet_sim"}     # analytic: same seed => same bytes
-LIVE = {"executor", "proc", "fleet_live"}     # real threads / processes
+BACKENDS = ["sim", "executor", "proc", "fleet_sim", "fleet_live",
+            "fleet_proc", "fleet_market"]
+FLEET = {"fleet_sim", "fleet_live", "fleet_proc", "fleet_market"}
+SEEDED = {"sim", "fleet_sim", "fleet_market"}  # analytic: same seed, same bytes
+LIVE = {"executor", "proc", "fleet_live", "fleet_proc"}  # threads / processes
 LIVE_KW = {"window_s": 0.04}
 # model_latency throttles the single-machine rigs' background
 # consumption: conformance asserts contracts, not rates, and an
@@ -54,6 +55,17 @@ def _cluster():
     return ClusterSpec("contract_fleet", trainers, shared_pool=4)
 
 
+def _market():
+    """The _cluster shape as a MarketSpec: every fleet backend must run
+    a jobs-partitioned spec unchanged (jobs only matter to the optimizer
+    layer) — MarketSpec conformance IS ClusterSpec conformance."""
+    from repro.data.fleet import JobSpec, MarketSpec
+    base = _cluster()
+    return MarketSpec("contract_market", base.trainers, shared_pool=4,
+                      jobs=(JobSpec("j0", ("a",), weight=2.0, floor=1),
+                            JobSpec("j1", ("b",))))
+
+
 def _make(name: str, seed: int = 0) -> Backend:
     if name == "sim":
         return make_backend("sim", _spec(), _machine(), seed=seed)
@@ -67,6 +79,11 @@ def _make(name: str, seed: int = 0) -> Backend:
                             ballast=False, **SINGLE_KW)
     if name == "fleet_sim":
         return make_backend("sim", _cluster(), seed=seed)
+    if name == "fleet_market":
+        return make_backend("sim", _market(), seed=seed)
+    if name == "fleet_proc":
+        return make_backend("proc", _cluster(), seed=seed, ballast=False,
+                            **LIVE_KW)
     return make_backend("live", _cluster(), seed=seed, **LIVE_KW)
 
 
