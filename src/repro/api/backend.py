@@ -43,7 +43,7 @@ class UnsupportedEventError(TypeError):
 class Backend(Protocol):
     """What `Session` drives. See module docstring for the contract."""
 
-    def apply(self, alloc) -> Telemetry: ...
+    def apply(self, alloc: Any) -> Telemetry: ...
 
     def inject(self, event: Event) -> None: ...
 
@@ -71,7 +71,7 @@ class BackendBase:
     `snapshot`, and the three properties; fleet-capable ones override
     `_churn`."""
 
-    def __init__(self):
+    def __init__(self) -> None:
         self._shutdown_acct: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------ events --
@@ -95,7 +95,7 @@ class BackendBase:
             f"ChurnEvent ({event.kind!r}) needs a fleet backend")
 
     # ------------------------------------------------------ observations --
-    def stats(self) -> Optional[dict]:
+    def stats(self) -> Optional[Dict[str, Any]]:
         """Live measurement stats for the optimizer's `propose(...,
         stats=...)` hook (the executor stats() contract). Analytic
         backends return None — policies then observe through their own
@@ -120,7 +120,7 @@ class BackendBase:
             self._shutdown_acct = self._do_shutdown()
         return self._shutdown_acct
 
-    def _check_open(self):
+    def _check_open(self) -> None:
         """Adapters call this at the top of apply(): running a torn-down
         backend is a named error on every substrate, not an
         AttributeError from whichever resource happened to be freed."""
@@ -132,8 +132,8 @@ class BackendBase:
     def _do_shutdown(self) -> Dict[str, Any]:
         return {}
 
-    def __enter__(self):
+    def __enter__(self) -> "BackendBase":
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, *exc: Any) -> None:
         self.shutdown()

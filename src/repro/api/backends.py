@@ -49,23 +49,25 @@ from repro.data.simulator import (MachineSpec, OOM_RESTART_TICKS,
 class SimBackend(BackendBase):
     """The analytic `PipelineSim` behind the protocol."""
 
-    def __init__(self, spec=None, machine: Optional[MachineSpec] = None,
+    def __init__(self, spec: Any = None,
+                 machine: Optional[MachineSpec] = None,
                  *, model_latency: float = 0.0, seed: int = 0,
-                 obs_noise: float = 0.02, sim: Optional[PipelineSim] = None):
+                 obs_noise: float = 0.02,
+                 sim: Optional[PipelineSim] = None) -> None:
         super().__init__()
         self.sim = sim if sim is not None else PipelineSim(
             spec, machine, model_latency, seed=seed, obs_noise=obs_noise)
         self.spec = self.sim.spec
 
-    def apply(self, alloc) -> Telemetry:
+    def apply(self, alloc: Any) -> Telemetry:
         self._check_open()
         validate_allocation(self.spec, alloc)
         return Telemetry.from_metrics(self.sim.apply(alloc))
 
-    def _resize(self, n_cpus: int):
+    def _resize(self, n_cpus: int) -> None:
         self.sim.resize(n_cpus)
 
-    def _advance_clock(self):
+    def _advance_clock(self) -> None:
         self.sim.time += 1
 
     def snapshot(self) -> Dict[str, Any]:
@@ -93,16 +95,16 @@ class _SingleRigBackend(BackendBase):
     protocol properties, snapshot, resize, the measurement window, and
     teardown accounting — so only each plane's `apply` judge differs."""
 
-    def __init__(self, window_s: float, queue_depth: int):
+    def __init__(self, window_s: float, queue_depth: int) -> None:
         super().__init__()
         self.window_s = float(window_s)
         self.queue_depth = queue_depth
         self.time = 0
 
-    def _launch(self, eff_cpus: Optional[int] = None):
+    def _launch(self, eff_cpus: Optional[int] = None) -> Any:
         raise NotImplementedError
 
-    def _measure_window(self, cap: int, alloc) -> float:
+    def _measure_window(self, cap: int, alloc: Any) -> float:
         """Apply the allocation, sleep one window, return the measured
         consumed-batch rate (the live-throughput contract)."""
         self._slot.prepare(cap, alloc)
@@ -118,18 +120,18 @@ class _SingleRigBackend(BackendBase):
         return {k: v for k, v in self._slot.rig.pipe.stats().items()
                 if k != "throughput"}
 
-    def stats(self) -> Optional[dict]:
+    def stats(self) -> Optional[Dict[str, Any]]:
         """The live stats() observation for propose(..., stats=...);
         None while the process is down (OOM restart window)."""
         return self._slot.rig.pipe.stats() if self._slot.live else None
 
     # ---------------------------------------------------------- protocol --
-    def _resize(self, n_cpus: int):
+    def _resize(self, n_cpus: int) -> None:
         self._machine = dataclasses.replace(self._machine, n_cpus=n_cpus)
         if self._slot.live:
             self._slot.rig.set_eff_cpus(n_cpus)
 
-    def _advance_clock(self):
+    def _advance_clock(self) -> None:
         self.time += 1
 
     @property
@@ -187,10 +189,11 @@ class ExecutorBackend(_SingleRigBackend):
         relaunch user code it did not build.
     """
 
-    def __init__(self, spec=None, machine: Optional[MachineSpec] = None,
+    def __init__(self, spec: Any = None,
+                 machine: Optional[MachineSpec] = None,
                  *, model_latency: float = 0.0, window_s: float = 0.05,
                  queue_depth: int = 8, seed: int = 0,
-                 pipe: Optional[ThreadedPipeline] = None):
+                 pipe: Optional[ThreadedPipeline] = None) -> None:
         # seed is accepted for factory-signature parity with SimBackend
         # (thread scheduling is the noise source here, not an RNG)
         super().__init__(window_s, queue_depth)
@@ -211,17 +214,18 @@ class ExecutorBackend(_SingleRigBackend):
             self._enforce_oom = True
 
     @classmethod
-    def wrap(cls, pipe: ThreadedPipeline, *, window_s: float = 0.05):
+    def wrap(cls, pipe: ThreadedPipeline, *,
+             window_s: float = 0.05) -> "ExecutorBackend":
         """Adopt an existing user pipeline (external consumer)."""
         return cls(pipe=pipe, window_s=window_s)
 
-    def _launch(self, eff_cpus: Optional[int] = None):
+    def _launch(self, eff_cpus: Optional[int] = None) -> _TrainerRig:
         if eff_cpus is None:
             eff_cpus = self._machine.n_cpus
         return _TrainerRig(self._trainer, eff_cpus, self.queue_depth)
 
     # ------------------------------------------------------------- tick ---
-    def apply(self, alloc) -> Telemetry:
+    def apply(self, alloc: Any) -> Telemetry:
         self._check_open()
         validate_allocation(self.spec, alloc)
         mem = graph_memory_mb(self.spec, alloc.workers, alloc.prefetch_mb)
@@ -258,13 +262,13 @@ class _ExternalRig:
     """Rig-shaped shim over a user-owned ThreadedPipeline (no consumer
     thread — the user's training loop is the consumer)."""
 
-    def __init__(self, pipe: ThreadedPipeline):
+    def __init__(self, pipe: ThreadedPipeline) -> None:
         self.pipe = pipe
 
-    def set_allocation(self, alloc):
+    def set_allocation(self, alloc: Any) -> None:
         self.pipe.set_allocation(alloc.workers, alloc.prefetch_mb)
 
-    def set_eff_cpus(self, n: int):
+    def set_eff_cpus(self, n: int) -> None:
         self.pipe.machine = dataclasses.replace(self.pipe.machine,
                                                 n_cpus=int(n))
 
@@ -298,10 +302,11 @@ class ProcessBackend(_SingleRigBackend):
         serialized section (calibratable live: `repro.data.calibrate`).
     """
 
-    def __init__(self, spec=None, machine: Optional[MachineSpec] = None,
+    def __init__(self, spec: Any = None,
+                 machine: Optional[MachineSpec] = None,
                  *, model_latency: float = 0.0, window_s: float = 0.1,
                  queue_depth: int = 8, seed: int = 0, ballast: bool = True,
-                 rss_interval: float = 0.2):
+                 rss_interval: float = 0.2) -> None:
         # seed: factory-signature parity (OS scheduling is the noise)
         super().__init__(window_s, queue_depth)
         self.ballast = ballast
@@ -315,12 +320,13 @@ class ProcessBackend(_SingleRigBackend):
         self._stale = 0.0
         self._delay_win: deque = deque(maxlen=100)
 
-    def _launch(self, eff_cpus: Optional[int] = None):
+    def _launch(self, eff_cpus: Optional[int] = None) -> _TrainerRig:
         from repro.data.proc_executor import ProcessPipeline, stage_fns_for
         if eff_cpus is None:
             eff_cpus = self._machine.n_cpus
 
-        def make_pipe(trainer, eff, queue_depth):
+        def make_pipe(trainer: TrainerSpec, eff: int,
+                      queue_depth: int) -> "ProcessPipeline":
             return ProcessPipeline(
                 trainer.pipeline,
                 fns=stage_fns_for(trainer.pipeline, ballast=self.ballast),
@@ -332,7 +338,7 @@ class ProcessBackend(_SingleRigBackend):
                            make_pipe=make_pipe)
 
     # ------------------------------------------------------------- tick ---
-    def apply(self, alloc) -> Telemetry:
+    def apply(self, alloc: Any) -> Telemetry:
         self._check_open()
         validate_allocation(self.spec, alloc)
         used = int(np.sum(alloc.workers))
@@ -425,8 +431,9 @@ class FeedBackend(BackendBase):
     `Session.step()` drives this backend one train-step window at a time.
     """
 
-    def __init__(self, pipe, feed, *, machine: Optional[MachineSpec] = None,
-                 device_step_s: Optional[float] = None):
+    def __init__(self, pipe: Any, feed: Any, *,
+                 machine: Optional[MachineSpec] = None,
+                 device_step_s: Optional[float] = None) -> None:
         super().__init__()
         self.pipe = pipe
         self.feed = feed
@@ -503,7 +510,7 @@ class FeedBackend(BackendBase):
             feed_stall_s=stall)
         return self._last_tel
 
-    def apply(self, alloc) -> Telemetry:
+    def apply(self, alloc: Any) -> Telemetry:
         self._check_open()
         if alloc is None:
             return self.measure()
@@ -512,16 +519,16 @@ class FeedBackend(BackendBase):
         return self._last_tel
 
     # ---------------------------------------------------------- protocol --
-    def stats(self) -> Optional[dict]:
+    def stats(self) -> Optional[Dict[str, Any]]:
         return self.pipe.stats()
 
-    def _resize(self, n_cpus: int):
+    def _resize(self, n_cpus: int) -> None:
         self._machine = dataclasses.replace(self._machine, n_cpus=n_cpus)
         self.pipe.machine = dataclasses.replace(self.pipe.machine,
                                                 n_cpus=n_cpus)
         self.pipe.apply_cpu_cap()
 
-    def _advance_clock(self):
+    def _advance_clock(self) -> None:
         self.time += 1
 
     def snapshot(self) -> Dict[str, Any]:
@@ -559,12 +566,12 @@ class _FleetAdapter(BackendBase):
 
     inner: FleetBackend
 
-    def __init__(self, inner: FleetBackend):
+    def __init__(self, inner: FleetBackend) -> None:
         super().__init__()
         self.inner = inner
         self.spec = inner.cluster
 
-    def apply(self, falloc) -> Telemetry:
+    def apply(self, falloc: Any) -> Telemetry:
         self._check_open()
         validate_fleet_allocation(self.spec, falloc)
         m = dict(self.inner.apply(falloc))
@@ -574,15 +581,15 @@ class _FleetAdapter(BackendBase):
                                 for n, d in per.items()}
         return Telemetry.from_metrics(m)
 
-    def _resize(self, n_cpus: int):
+    def _resize(self, n_cpus: int) -> None:
         self.inner.resize(n_cpus)         # fleet dialect: pool re-cap
 
-    def _churn(self, event: ChurnEvent):
+    def _churn(self, event: ChurnEvent) -> None:
         self.inner.inject_event(FleetEvent(
             tick=event.tick, kind=event.kind, trainer=event.trainer,
             n_cpus=event.n_cpus))
 
-    def _advance_clock(self):
+    def _advance_clock(self) -> None:
         self.inner.time += 1
 
     def snapshot(self) -> Dict[str, Any]:
@@ -592,7 +599,7 @@ class _FleetAdapter(BackendBase):
                 "oom_count": self.inner.oom_count}
 
     @property
-    def machine(self):
+    def machine(self) -> Any:
         return self.inner.machine         # FleetState
 
     @property
@@ -609,7 +616,7 @@ class FleetSimBackend(_FleetAdapter):
 
     def __init__(self, cluster: Optional[ClusterSpec] = None, *,
                  seed: int = 0, obs_noise: float = 0.02,
-                 sim: Optional[FleetSim] = None):
+                 sim: Optional[FleetSim] = None) -> None:
         super().__init__(sim if sim is not None
                          else FleetSim(cluster, seed=seed,
                                        obs_noise=obs_noise))
@@ -630,7 +637,7 @@ class LiveFleetBackend(_FleetAdapter):
 
     def __init__(self, cluster: Optional[ClusterSpec] = None, *,
                  seed: int = 0, window_s: float = 0.1,
-                 queue_depth: int = 8, fleet=None):
+                 queue_depth: int = 8, fleet: Any = None) -> None:
         if fleet is None:
             from repro.data.live_fleet import LiveFleet
             fleet = LiveFleet(cluster, seed=seed, window_s=window_s,
@@ -649,7 +656,7 @@ class ProcFleetBackend(_FleetAdapter):
     def __init__(self, cluster: Optional[ClusterSpec] = None, *,
                  seed: int = 0, window_s: float = 0.1,
                  queue_depth: int = 8, ballast: bool = True,
-                 rss_interval: float = 0.2, fleet=None):
+                 rss_interval: float = 0.2, fleet: Any = None) -> None:
         if fleet is None:
             from repro.data.live_fleet import ProcFleet
             fleet = ProcFleet(cluster, seed=seed, window_s=window_s,
@@ -668,12 +675,12 @@ class ControllerBackend(BackendBase):
     no optimizer — the published fig5/fig7 linear-chain benchmarks run
     through exactly this, keeping their golden JSONs byte-identical."""
 
-    def __init__(self, tuner):
+    def __init__(self, tuner: Any) -> None:
         super().__init__()
         self.tuner = tuner
         self.spec = tuner.spec
 
-    def apply(self, alloc) -> Telemetry:
+    def apply(self, alloc: Any) -> Telemetry:
         self._check_open()
         if alloc is not None:
             raise TypeError(
@@ -682,10 +689,10 @@ class ControllerBackend(BackendBase):
                 "ignores external proposals)")
         return Telemetry.from_metrics(self.tuner.tick())
 
-    def _resize(self, n_cpus: int):
+    def _resize(self, n_cpus: int) -> None:
         self.tuner.resize(n_cpus)
 
-    def _advance_clock(self):
+    def _advance_clock(self) -> None:
         self.tuner.env.sim.time += 1
 
     def snapshot(self) -> Dict[str, Any]:
@@ -707,7 +714,7 @@ class ControllerBackend(BackendBase):
         return self.tuner.env.sim.oom_count
 
 
-def as_backend(obj) -> BackendBase:
+def as_backend(obj: Any) -> BackendBase:
     """Wrap an already-constructed substrate. Known substrates get their
     typed adapter; anything else speaking the legacy machine/apply/resize
     dialect gets `DialectBackend` (no validation — the shim of last
@@ -731,19 +738,19 @@ class DialectBackend(BackendBase):
     (`machine` / `apply(alloc) -> dict` / `resize(n)` / `time` /
     `oom_count`)."""
 
-    def __init__(self, inner):
+    def __init__(self, inner: Any) -> None:
         super().__init__()
         self.inner = inner
         self.spec = getattr(inner, "spec", getattr(inner, "cluster", None))
 
-    def apply(self, alloc) -> Telemetry:
+    def apply(self, alloc: Any) -> Telemetry:
         self._check_open()
         return Telemetry.from_metrics(self.inner.apply(alloc))
 
-    def _resize(self, n_cpus: int):
+    def _resize(self, n_cpus: int) -> None:
         self.inner.resize(n_cpus)
 
-    def _advance_clock(self):
+    def _advance_clock(self) -> None:
         self.inner.time += 1
 
     def snapshot(self) -> Dict[str, Any]:
@@ -751,7 +758,7 @@ class DialectBackend(BackendBase):
                 "oom_count": getattr(self.inner, "oom_count", 0)}
 
     @property
-    def machine(self):
+    def machine(self) -> Any:
         return self.inner.machine
 
     @property

@@ -25,7 +25,7 @@ can be built (and serialized) without touching the data plane.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List, Sequence, Tuple, Union
+from typing import Any, Iterable, List, Sequence, Tuple, Union
 
 
 @dataclass(frozen=True)
@@ -74,7 +74,7 @@ def churn_events(events: Sequence) -> List[ChurnEvent]:
             for ev in events]
 
 
-def job_churn_events(market,
+def job_churn_events(market: Any,
                      schedule: Iterable[Tuple[int, str, str]]
                      ) -> List[ChurnEvent]:
     """JOB-level churn for a MarketSpec: each (tick, kind, job) entry —

@@ -17,7 +17,7 @@ pass a constructed Optimizer instance directly.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Any, Callable, Optional, Sequence, Union
 
 from repro.api.backend import Backend
 from repro.api.backends import (ExecutorBackend, FleetSimBackend,
@@ -41,8 +41,8 @@ BACKENDS = {
 _ALIASES = {"executor": "live", "process": "proc"}
 
 
-def make_backend(name: str, spec, machine=None, *, seed: int = 0,
-                 **kw) -> Backend:
+def make_backend(name: str, spec: Any, machine: Any = None, *,
+                 seed: int = 0, **kw: Any) -> Backend:
     """Build a registered backend for `spec` (StageGraph or ClusterSpec).
     Extra keyword args go to the adapter (window_s, obs_noise, ...)."""
     plane = "fleet" if isinstance(spec, ClusterSpec) else "single"
@@ -68,9 +68,12 @@ def make_backend(name: str, spec, machine=None, *, seed: int = 0,
     return cls(spec, machine, seed=seed, **kw)
 
 
-def tune(spec, machine=None, *, optimizer="intune", backend="sim",
-         ticks: int = 600, seed: int = 0, events=None,
-         relaunch_dead: int = 0, collect=None,
+def tune(spec: Any, machine: Any = None, *,
+         optimizer: Union[str, Any] = "intune", backend: str = "sim",
+         ticks: int = 600, seed: int = 0,
+         events: Optional[Sequence[Any]] = None,
+         relaunch_dead: int = 0,
+         collect: Optional[Callable[..., None]] = None,
          optimizer_kw: Optional[dict] = None,
          backend_kw: Optional[dict] = None) -> RunResult:
     """One line from spec to tuned run: build the backend and the

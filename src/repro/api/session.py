@@ -28,7 +28,7 @@ JSONs regenerate byte-identically through this path):
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -37,7 +37,7 @@ from repro.api.events import DeadWindow, Event
 from repro.api.telemetry import RunResult, Telemetry
 
 
-def _proposal_changed(alloc, prev) -> bool:
+def _proposal_changed(alloc: Any, prev: Any) -> bool:
     """Allocation and FleetAllocation both expose the flattened
     workers/prefetch_mb views this compares on."""
     return (not np.array_equal(alloc.workers, prev.workers)
@@ -51,13 +51,14 @@ class FrozenPolicy:
 
     name = "frozen"
 
-    def __init__(self, alloc):
+    def __init__(self, alloc: Any) -> None:
         self.alloc = alloc
 
-    def propose(self, spec, machine, stats=None):
+    def propose(self, spec: Any, machine: Any,
+                stats: Optional[Dict[str, Any]] = None) -> Any:
         return self.alloc
 
-    def observe(self, metrics) -> None:
+    def observe(self, metrics: Telemetry) -> None:
         pass
 
 
@@ -69,7 +70,8 @@ class Session:
     context manager (or call `close()`) to tear live backends down.
     """
 
-    def __init__(self, backend: Backend, optimizer=None, *, spec=None):
+    def __init__(self, backend: Backend, optimizer: Optional[Any] = None,
+                 *, spec: Optional[Any] = None) -> None:
         self.backend = backend
         self.optimizer = optimizer
         self.spec = spec if spec is not None \
@@ -164,11 +166,11 @@ class Session:
         return tel
 
     # --------------------------------------------------------- lifecycle --
-    def close(self) -> dict:
+    def close(self) -> Dict[str, Any]:
         return self.backend.shutdown()
 
     def __enter__(self) -> "Session":
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, *exc: Any) -> None:
         self.close()

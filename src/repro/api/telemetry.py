@@ -14,7 +14,7 @@ types.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 _CORE = ("throughput", "mem_mb", "used_cpus", "oom", "restarting")
 
@@ -40,16 +40,17 @@ class _DictCompat:
     diverge."""
 
     _FIELDS: tuple = ()
+    extras: Dict[str, Any]
 
-    def keys(self):
+    def keys(self) -> List[str]:
         return list(self._FIELDS) + list(self.extras)
 
-    def __getitem__(self, key: str):
+    def __getitem__(self, key: str) -> Any:
         if key in self._FIELDS:
             return getattr(self, key)
         return self.extras[key]
 
-    def get(self, key: str, default=None):
+    def get(self, key: str, default: Any = None) -> Any:
         try:
             return self[key]
         except KeyError:
@@ -61,10 +62,10 @@ class _DictCompat:
     def __iter__(self) -> Iterator[str]:
         return iter(self.keys())
 
-    def items(self):
+    def items(self) -> List[Tuple[str, Any]]:
         return [(k, self[k]) for k in self.keys()]
 
-    def values(self):
+    def values(self) -> List[Any]:
         return [self[k] for k in self.keys()]
 
     def to_dict(self) -> Dict[str, Any]:
@@ -120,7 +121,7 @@ class Telemetry(_DictCompat):
     # when None.
     _FIELDS = _CORE + _FEED + _STREAM
 
-    def keys(self):
+    def keys(self) -> List[str]:
         return ([k for k in self._FIELDS
                  if k not in _OPTIONAL or getattr(self, k) is not None]
                 + list(self.extras))

@@ -10,6 +10,8 @@ offending field.
 """
 from __future__ import annotations
 
+from typing import Any
+
 import numpy as np
 
 
@@ -17,7 +19,7 @@ class AllocationError(ValueError):
     """A proposed Allocation/FleetAllocation is structurally invalid."""
 
 
-def validate_allocation(spec, alloc) -> None:
+def validate_allocation(spec: Any, alloc: Any) -> None:
     """Reject structurally invalid single-machine Allocations.
 
     spec: a StageGraph (anything with n_stages); alloc: an Allocation
@@ -46,7 +48,7 @@ def validate_allocation(spec, alloc) -> None:
             f"prefetch_mb must be >= 0, got {alloc.prefetch_mb}")
 
 
-def validate_fleet_allocation(cluster, falloc) -> None:
+def validate_fleet_allocation(cluster: Any, falloc: Any) -> None:
     """Reject structurally invalid FleetAllocations: every per-trainer
     Allocation is validated against that trainer's pipeline, and grants
     must be non-negative. (Grant totals vs the pool stay the backend's

@@ -6,7 +6,7 @@ Sharding overrides are tuple-of-pairs for the same reason.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -31,7 +31,7 @@ from functools import lru_cache
 
 import numpy as np
 
-from repro.data.pipeline import StageGraph, stage_throughput
+from repro.data.pipeline import StageGraph
 from repro.data.simulator import Allocation, MachineSpec, PipelineSim
 
 PipelineSpec = StageGraph   # pre-DAG alias, kept for imports

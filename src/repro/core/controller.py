@@ -16,15 +16,13 @@ a restarted job resumes pipeline tuning where it left off.
 from __future__ import annotations
 
 import os
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
 
-from typing import TYPE_CHECKING
-
 from repro.core import actions as act_lib
 from repro.core.agent import DQNAgent, DQNConfig
-from repro.core.env import PipelineEnv, even_allocation
+from repro.core.env import PipelineEnv
 from repro.data.pipeline import PipelineSpec
 from repro.data.simulator import Allocation, MachineSpec
 

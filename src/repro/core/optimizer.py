@@ -22,7 +22,7 @@ relaunch behavior is the driver charging a dead window for that).
 """
 from __future__ import annotations
 
-from typing import (TYPE_CHECKING, Callable, Dict, Optional, Protocol,
+from typing import (TYPE_CHECKING, Callable, Optional, Protocol, 
                     runtime_checkable)
 
 from repro.data.pipeline import StageGraph

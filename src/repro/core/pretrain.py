@@ -82,10 +82,11 @@ def main(argv=None):
     ap.add_argument("--ticks", type=int, default=300)
     ap.add_argument("--out", default="experiments/agents")
     args = ap.parse_args(argv)
-    t0 = time.time()
+    t0 = time.time()  # lint: allow[sim-wall-clock] -- log-only: feeds the elapsed-time print below, never a score
     agent = pretrain(args.stages, args.episodes, args.ticks)
     path = os.path.join(args.out, f"dqn_r{args.stages}.npz")
     save_agent(agent, path)
+    # lint: allow[sim-wall-clock] -- log-only: wall time printed for the operator, not recorded anywhere
     print(f"saved {path} ({time.time() - t0:.0f}s)")
 
 

@@ -22,7 +22,6 @@ import time
 from typing import Callable, Dict, Iterator, Optional
 
 import jax
-import numpy as np
 
 
 class ShardError(ValueError):

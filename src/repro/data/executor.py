@@ -22,7 +22,6 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
-import numpy as np
 
 from repro.data.pipeline import StageGraph
 from repro.data.simulator import MachineSpec

@@ -22,8 +22,8 @@ Stage costs default to the latency shares of the paper's Figure 3
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from repro.data.stream import ArrivalProcess
 

@@ -1047,6 +1047,7 @@ class ProcessPipeline:
         delivered = sink_pool.delivered()
         consumed = self.out_meter.count
         for q in list(self.edge_queues.values()) + [self.out_q]:
+            # lint: allow[no-cancel-join-thread] -- parent-side only, after every worker was joined/terminated/killed above; a straggler terminated mid-write leaves the queue's write lock orphaned, and without this the PARENT's feeder thread blocks forever on it at close(). The only parent data at risk here is the re-put _Stop sentinel.
             q.cancel_join_thread()
             q.close()
         return {"delivered": delivered, "consumed": consumed,

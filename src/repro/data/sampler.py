@@ -9,7 +9,7 @@ irregular, adaptive-allocation-friendly stage in the assignment
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

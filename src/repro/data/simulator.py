@@ -22,15 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.data.pipeline import PipelineSpec, StageSpec, stage_throughput
+from repro.data.pipeline import PipelineSpec, stage_throughput
 
 
-@dataclass
+@dataclass(frozen=True)
 class MachineSpec:
     n_cpus: int = 128
     mem_mb: float = 65536.0

@@ -9,7 +9,7 @@ offline (scale / reusability / volatility, §1).
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Optional
 
 import numpy as np
 

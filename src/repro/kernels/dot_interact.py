@@ -13,7 +13,6 @@ Block shape: (TB, F, D) with TB sized so TB*F*D*2B stays well under VMEM
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

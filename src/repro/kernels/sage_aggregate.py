@@ -8,7 +8,6 @@ block reused across batch tiles).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

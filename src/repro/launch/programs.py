@@ -14,8 +14,7 @@ launch/train.py (real execution on the host mesh) consume Programs.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,41 @@
+"""repro.lint — the repo's contracts, machine-enforced (DESIGN.md §13).
+
+Every acceptance bar in this repo rests on invariants that used to be
+enforced only by prose: the sim plane must be wall-clock-free and
+seed-deterministic (same-seed goldens are byte-identical), specs must
+stay frozen/picklable across process boundaries, every Telemetry field
+added after the pinned baseline must default to None (golden stability),
+and the shutdown protocol bans the teardown calls that orphan
+cross-process queue locks. This package is the compiler for those
+contracts: an AST rule engine with two analysis families —
+
+  contract rules   sim-plane purity (no wall clock / sleep / threading /
+                   unseeded RNG in the golden-pinned modules), forbidden
+                   APIs (`cancel_join_thread`, bare mp queues outside the
+                   soft/hard `shutdown(drain=)` protocol), spec hygiene
+                   (frozen dataclasses, no mutable defaults), and golden
+                   stability (post-baseline Telemetry/RunResult fields
+                   default to None);
+  concurrency      the lock-acquisition graph extracted from `with`
+                   statements and `acquire()` calls over the executor
+                   modules: lock-order cycles, and unbounded blocking
+                   calls (`get`/`put`/`join`/`wait`/`acquire` with no
+                   timeout) made while holding a lock — the deadlock
+                   class the PR-6 postmortem describes.
+
+A violation the repo has *decided* to keep is allowlisted in place:
+
+    q.cancel_join_thread()  # lint: allow[no-cancel-join-thread] -- why
+
+The written reason is mandatory; a pragma with no reason, and a pragma
+that suppresses nothing, are themselves findings. CLI:
+
+    python -m repro.lint src/            # human output, exit 1 on findings
+    python -m repro.lint --json src/     # machine-readable report
+"""
+from repro.lint.engine import LintReport, lint_paths, lint_source
+from repro.lint.findings import Finding
+from repro.lint.rules import ALL_RULES, Rule
+
+__all__ = ["ALL_RULES", "Finding", "LintReport", "Rule", "lint_paths",
+           "lint_source"]

@@ -1,0 +1,55 @@
+"""CLI: `python -m repro.lint [paths...]`.
+
+Exit 0 when every finding is pragma-suppressed (with a written reason),
+exit 1 otherwise. `--json` emits the machine-readable report the CI
+lint job archives; `--no-pragmas` ignores the allowlist entirely — the
+acceptance tests use it to prove each pragma is load-bearing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.lint.engine import lint_paths
+from repro.lint.rules import ALL_RULES
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Contract linter: sim-plane purity, shutdown-protocol "
+                    "and golden-stability invariants, lock-graph analysis.")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the machine-readable JSON report")
+    parser.add_argument("--no-pragmas", action="store_true",
+                        help="ignore '# lint: allow[...]' pragmas (reports "
+                             "every finding as unsuppressed)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule registry and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id:24s} {rule.doc}")
+        return 0
+
+    report = lint_paths(args.paths, respect_pragmas=not args.no_pragmas)
+
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+    else:
+        for f in report.findings:
+            print(f.format())
+        n = len(report.unsuppressed)
+        sup = len(report.findings) - n
+        print(f"{report.files_checked} files checked: "
+              f"{n} finding(s), {sup} suppressed")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

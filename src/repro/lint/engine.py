@@ -1,0 +1,115 @@
+"""The engine: parse files, run applicable rules, apply the allowlist.
+
+`lint_paths` walks files/directories, `lint_source` lints one in-memory
+module (the test fixtures' entry point). Both return a `LintReport`:
+every finding — suppressed ones included, flagged as such — plus the
+pragma problems (`bad-pragma`, `unused-pragma`) and `parse-error`
+findings, which can never be suppressed. The exit-code contract lives
+in `LintReport.ok`: clean means zero unsuppressed findings.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+from repro.lint.findings import PARSE_ERROR, UNUSED_PRAGMA, Finding
+from repro.lint.pragmas import collect_pragmas
+from repro.lint.rules import ALL_RULES, RULE_IDS, ModuleInfo, Rule
+
+
+@dataclass
+class LintReport:
+    """All findings of one lint run, sorted deterministically."""
+    findings: List[Finding] = field(default_factory=list)
+    files_checked: int = 0
+
+    @property
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.unsuppressed
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "files_checked": self.files_checked,
+            "ok": self.ok,
+            "counts": {
+                "total": len(self.findings),
+                "suppressed": len(self.findings) - len(self.unsuppressed),
+                "unsuppressed": len(self.unsuppressed),
+            },
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+def lint_source(path: str, text: str,
+                rules: Optional[Sequence[Rule]] = None,
+                respect_pragmas: bool = True) -> List[Finding]:
+    """Lint one module given as source text. `path` scopes the rules."""
+    rules = ALL_RULES if rules is None else rules
+    norm = path.replace("\\", "/")
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as exc:
+        return [Finding(norm, exc.lineno or 1, (exc.offset or 1) - 1,
+                        PARSE_ERROR, f"syntax error: {exc.msg}")]
+    mod = ModuleInfo(path=norm, tree=tree, text=text)
+    raw: List[Finding] = []
+    for rule in rules:
+        if rule.applies(norm):
+            raw.extend(rule.check(mod))
+    if not respect_pragmas:
+        return sorted(raw)
+    table = collect_pragmas(norm, text, known_rules=set(RULE_IDS))
+    out: List[Finding] = list(table.problems)
+    for f in raw:
+        if table.covers(f.line, f.rule):
+            f = replace(f, suppressed=True)
+        out.append(f)
+    for pragma in table.unused():
+        out.append(Finding(
+            norm, pragma.line, 0, UNUSED_PRAGMA,
+            f"pragma allow{list(pragma.rules)} suppresses nothing; "
+            f"delete it (stale allowlists rot into blanket permission)"))
+    return sorted(out)
+
+
+def lint_paths(paths: Iterable[str],
+               rules: Optional[Sequence[Rule]] = None,
+               respect_pragmas: bool = True) -> LintReport:
+    """Lint every .py file under `paths` (files or directories)."""
+    report = LintReport()
+    for fpath in _iter_py_files(paths):
+        try:
+            with open(fpath, encoding="utf-8") as fh:
+                text = fh.read()
+        except OSError as exc:
+            report.findings.append(Finding(
+                fpath.replace("\\", "/"), 1, 0, PARSE_ERROR,
+                f"unreadable: {exc}"))
+            continue
+        report.files_checked += 1
+        report.findings.extend(
+            lint_source(fpath, text, rules=rules,
+                        respect_pragmas=respect_pragmas))
+    report.findings.sort()
+    return report
+
+
+def _iter_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for path in paths:
+        if os.path.isdir(path):
+            for root, dirs, files in os.walk(path):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        out.append(os.path.join(root, name))
+        elif path.endswith(".py"):
+            out.append(path)
+    return sorted(out)

@@ -1,0 +1,41 @@
+"""Finding: one rule violation at one source location.
+
+Findings are plain frozen dataclasses so reports sort, dedupe, and
+serialize deterministically — the JSON output is part of the CLI's
+contract (tests/test_lint.py pins the schema).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Any, Dict
+
+# Engine-level rule ids (not in the rule registry: they report on the
+# allowlist mechanism itself and can never be pragma-suppressed).
+BAD_PRAGMA = "bad-pragma"
+UNUSED_PRAGMA = "unused-pragma"
+PARSE_ERROR = "parse-error"
+META_RULES = (BAD_PRAGMA, UNUSED_PRAGMA, PARSE_ERROR)
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One violation: where, which rule, and what the reader should do.
+
+    `suppressed` marks a finding matched by a `# lint: allow[...]`
+    pragma — reported for transparency (and for the delete-any-pragma
+    acceptance test) but not counted toward the exit code.
+    """
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    suppressed: bool = False
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    def format(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.rule}] {self.message}{tag}")

@@ -1,0 +1,134 @@
+"""The allowlist: `# lint: allow[rule-id] -- reason` pragmas.
+
+A pragma suppresses findings of the named rule(s) on the line it sits on
+— or, when it occupies a line of its own, on the next line that holds
+code. The reason after `--` is mandatory: an allowlisted violation with
+no written justification defeats the point of the allowlist (DESIGN.md
+§13 pragma etiquette), so a reason-less pragma is itself a finding, as
+is a pragma that suppresses nothing (stale allowlists rot into blanket
+permission).
+
+Comments are found with `tokenize`, not a regex over raw lines, so
+pragma-shaped text inside string literals never registers.
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, List, Set, Tuple
+
+from repro.lint.findings import BAD_PRAGMA, Finding
+
+# shape: "lint: allow[rule-a, rule-b] -- justification"
+_PRAGMA_RE = re.compile(
+    r"#\s*lint:\s*allow\[(?P<rules>[^\]]*)\]\s*(?:--\s*(?P<reason>.*))?$")
+_MARKER_RE = re.compile(r"#\s*lint:")
+
+
+@dataclass
+class Pragma:
+    """One parsed allow-pragma and the source line(s) it covers."""
+    line: int                      # where the pragma comment sits
+    target: int                    # the code line it suppresses
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+
+@dataclass
+class PragmaTable:
+    """All pragmas of one file, indexed by the code line they cover."""
+    pragmas: List[Pragma] = field(default_factory=list)
+    problems: List[Finding] = field(default_factory=list)
+    _by_line: Dict[int, List[Pragma]] = field(default_factory=dict)
+
+    def covers(self, line: int, rule: str) -> bool:
+        """True (and marks the pragma used) when `rule` is allowlisted
+        at `line`."""
+        hit = False
+        for p in self._by_line.get(line, []):
+            if rule in p.rules:
+                p.used = True
+                hit = True
+        return hit
+
+    def unused(self) -> List[Pragma]:
+        return [p for p in self.pragmas if not p.used]
+
+
+def collect_pragmas(path: str, text: str, known_rules: Set[str]
+                    ) -> PragmaTable:
+    """Parse every pragma comment in `text`.
+
+    Malformed pragmas (unparseable allow[...], unknown rule id, missing
+    `-- reason`) land in `problems` as BAD_PRAGMA findings instead of
+    silently suppressing nothing.
+    """
+    table = PragmaTable()
+    comments: List[Tuple[int, int, str, bool]] = []  # line, col, text, own_line
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                own_line = tok.line[:tok.start[1]].strip() == ""
+                comments.append((tok.start[0], tok.start[1], tok.string,
+                                 own_line))
+    except tokenize.TokenError:
+        return table          # the engine reports the parse error itself
+    # map comment-only lines to the next line holding code
+    code_lines = _code_lines(text)
+    for line, col, comment, own_line in comments:
+        if not _MARKER_RE.search(comment):
+            continue
+        m = _PRAGMA_RE.search(comment)
+        if m is None:
+            table.problems.append(Finding(
+                path, line, col, BAD_PRAGMA,
+                "unparseable lint pragma; expected "
+                "'# lint: allow[rule-id] -- reason'"))
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",")
+                      if r.strip())
+        reason = (m.group("reason") or "").strip()
+        if not rules:
+            table.problems.append(Finding(
+                path, line, col, BAD_PRAGMA,
+                "pragma allowlists no rules; name the rule id being "
+                "suppressed"))
+            continue
+        unknown = [r for r in rules if r not in known_rules]
+        if unknown:
+            table.problems.append(Finding(
+                path, line, col, BAD_PRAGMA,
+                f"pragma names unknown rule(s) {unknown}; known rules: "
+                f"{sorted(known_rules)}"))
+            continue
+        if not reason:
+            table.problems.append(Finding(
+                path, line, col, BAD_PRAGMA,
+                f"pragma for {list(rules)} carries no justification; "
+                "append '-- <why this site is the sanctioned exception>'"))
+            continue
+        target = line if not own_line else _next_code_line(code_lines, line)
+        pragma = Pragma(line=line, target=target, rules=rules, reason=reason)
+        table.pragmas.append(pragma)
+        table._by_line.setdefault(target, []).append(pragma)
+    return table
+
+
+def _code_lines(text: str) -> List[int]:
+    """1-based line numbers that hold code (non-blank, non-comment)."""
+    out = []
+    for i, raw in enumerate(text.splitlines(), start=1):
+        s = raw.strip()
+        if s and not s.startswith("#"):
+            out.append(i)
+    return out
+
+
+def _next_code_line(code_lines: List[int], after: int) -> int:
+    for ln in code_lines:
+        if ln > after:
+            return ln
+    return after

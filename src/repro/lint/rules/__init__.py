@@ -1,0 +1,106 @@
+"""Rule registry + the shared Rule / ModuleInfo machinery.
+
+A rule is one invariant with one stable kebab-case id. Rules are scoped
+by path — the sim-plane purity family only runs over the modules whose
+same-seed goldens CI pins, the concurrency family only over the
+executor modules that hold real locks — so adding a rule never taxes
+unrelated code. The registry below is THE list; the CLI's --list-rules,
+the pragma validator's known-rule check, and DESIGN.md §13's table all
+read from it.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Callable, Iterator, List, Tuple
+
+from repro.lint.findings import Finding
+
+
+@dataclass(frozen=True)
+class ModuleInfo:
+    """One parsed source file handed to every applicable rule."""
+    path: str                    # posix-style path as reported in findings
+    tree: ast.Module
+    text: str
+
+    def parts(self) -> Tuple[str, ...]:
+        return tuple(self.path.replace("\\", "/").split("/"))
+
+
+class Rule:
+    """One invariant: a stable id, a one-line contract, a path scope,
+    and a `check` that yields findings. Subclasses override `check`."""
+
+    id: str = ""
+    doc: str = ""                # one line: the contract being enforced
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, mod: ModuleInfo, node: ast.AST, message: str
+                ) -> Finding:
+        return Finding(mod.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), self.id, message)
+
+
+# ---------------------------------------------------------------------------
+# path scopes
+# ---------------------------------------------------------------------------
+
+# The modules whose same-seed goldens CI pins (fig5 byte-identical JSON,
+# market determinism traces, fleet oracle scores): any wall-clock read,
+# sleep, thread, or unseeded RNG here makes a "deterministic" score a
+# function of the host, silently voiding every golden.
+SIM_PLANE_FILES = (
+    ("data", "simulator.py"),
+    ("data", "fleet.py"),
+    ("data", "stream.py"),
+    ("data", "pipeline.py"),
+)
+SIM_PLANE_DIRS = ("core",)
+
+# The modules that hold real locks across real threads/processes — the
+# concurrency family's lock-graph analysis runs here.
+CONCURRENCY_FILES = (
+    ("data", "executor.py"),
+    ("data", "proc_executor.py"),
+    ("data", "live_fleet.py"),
+    ("data", "device_feed.py"),
+)
+
+
+def in_sim_plane(path: str) -> bool:
+    parts = tuple(path.replace("\\", "/").split("/"))
+    if parts[-2:] in [tuple(f) for f in SIM_PLANE_FILES]:
+        return True
+    return len(parts) >= 2 and parts[-2] in SIM_PLANE_DIRS
+
+
+def in_concurrency_scope(path: str) -> bool:
+    parts = tuple(path.replace("\\", "/").split("/"))
+    return parts[-2:] in [tuple(f) for f in CONCURRENCY_FILES]
+
+
+def _registry() -> List[Rule]:
+    from repro.lint.rules import apis, concurrency, goldens, purity, specs
+    return [
+        purity.SimWallClock(),
+        purity.SimSleep(),
+        purity.SimThreadImport(),
+        purity.SimUnseededRng(),
+        apis.NoCancelJoinThread(),
+        apis.MpQueueProtocol(),
+        specs.SpecFrozen(),
+        specs.MutableDefault(),
+        goldens.GoldenFieldDefault(),
+        concurrency.LockOrderCycle(),
+        concurrency.BlockingWhileLocked(),
+    ]
+
+
+ALL_RULES: List[Rule] = _registry()
+RULE_IDS = {r.id for r in ALL_RULES}

@@ -1,0 +1,91 @@
+"""Forbidden APIs: teardown calls the shutdown protocol outlaws.
+
+The soft/hard `shutdown(drain=)` protocol (DESIGN.md §7/§9) is the only
+sanctioned way out of a pipeline: soft-stop so in-flight items commit,
+drain, hard-stop, join every process ever started. Two API families
+routinely tempt code out of that protocol:
+
+  - `Queue.cancel_join_thread()`: documented-forbidden since PR 6 — a
+    queue feeder killed mid-write holds the queue's cross-process write
+    lock, and cancelling the join orphans that lock, wedging every other
+    writer on the queue permanently. The one sanctioned parent-side
+    teardown site carries a pragma explaining why it cannot wedge.
+  - bare `mp.Queue()` construction outside a class implementing
+    `shutdown(drain=...)`: a queue nobody is contracted to drain is a
+    queue whose writers block forever at teardown.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.lint.findings import Finding
+from repro.lint.rules import ModuleInfo, Rule
+
+_MP_NAMES = frozenset({"mp", "multiprocessing", "ctx"})
+_MP_QUEUE_CTORS = frozenset({"Queue", "SimpleQueue", "JoinableQueue"})
+
+
+class NoCancelJoinThread(Rule):
+    id = "no-cancel-join-thread"
+    doc = ("Queue.cancel_join_thread() is banned (PR 6): cancelling a "
+           "feeder that holds the queue write lock orphans the lock and "
+           "wedges every writer")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "cancel_join_thread":
+                yield self.finding(
+                    mod, node,
+                    "cancel_join_thread() can orphan the queue's "
+                    "cross-process write lock; drain + join via the "
+                    "shutdown(drain=) protocol instead")
+
+
+class MpQueueProtocol(Rule):
+    id = "mp-queue-protocol"
+    doc = ("multiprocessing queues may only be constructed inside a class "
+           "implementing the soft/hard shutdown(drain=) protocol")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        yield from self._scan(mod, mod.tree.body, owner=None)
+
+    # ------------------------------------------------------------------
+    def _scan(self, mod: ModuleInfo, body, owner: Optional[ast.ClassDef]
+              ) -> Iterator[Finding]:
+        for node in body:
+            if isinstance(node, ast.ClassDef):
+                yield from self._scan(mod, node.body, owner=node)
+            else:
+                for sub in ast.walk(node):
+                    if self._is_mp_queue_ctor(sub) and \
+                            not self._has_shutdown_protocol(owner):
+                        where = f"class {owner.name!r}" if owner else \
+                            "module scope"
+                        yield self.finding(
+                            mod, sub,
+                            f"mp queue constructed in {where}, which does "
+                            f"not implement shutdown(drain=...); queues "
+                            f"need a contracted drain-and-join owner")
+
+    @staticmethod
+    def _is_mp_queue_ctor(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _MP_QUEUE_CTORS
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in _MP_NAMES)
+
+    @staticmethod
+    def _has_shutdown_protocol(owner: Optional[ast.ClassDef]) -> bool:
+        if owner is None:
+            return False
+        for item in owner.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and item.name == "shutdown":
+                args = item.args
+                names = [a.arg for a in args.args + args.kwonlyargs]
+                return "drain" in names
+        return False

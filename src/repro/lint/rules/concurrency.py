@@ -1,0 +1,249 @@
+"""Concurrency analysis: lock-order cycles and blocking-while-locked.
+
+Scope: the four modules that hold real locks across real threads and
+processes (executor, proc_executor, live_fleet, device_feed). Two
+invariants:
+
+  - `lock-order-cycle`: the module's lock-acquisition graph (an edge
+    A -> B whenever B is acquired while A is held, collected from
+    `with`-statements and `.acquire()` calls) must be acyclic. A cycle
+    is a deadlock waiting for the right interleaving.
+  - `blocking-while-locked`: no unbounded blocking call (Queue.get/put
+    with no timeout, join()/wait()/acquire() with no timeout) while any
+    lock is held. A blocked holder stalls every other thread at the
+    lock, turning one slow queue into a pipeline-wide freeze — and if
+    the awaited party needs that same lock, a deadlock.
+
+Lock identity is textual (`ast.unparse` of the receiver), which is the
+right granularity here: the executor modules name their locks
+(`self._lock`, `self.gather_lock`, `counter.get_lock()`) and never
+alias them through locals.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.lint.findings import Finding
+from repro.lint.rules import ModuleInfo, Rule, in_concurrency_scope
+
+_LOCK_WORDS = ("lock", "mutex")
+_BLOCKING_ATTRS = frozenset({"get", "put", "join", "wait", "acquire"})
+
+
+def _last_segment(node: ast.AST) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _lock_expr(node: ast.AST) -> Optional[str]:
+    """The textual identity of `node` when it looks like a lock."""
+    # counter.get_lock() — multiprocessing.Value's guard
+    if isinstance(node, ast.Call) and \
+            isinstance(node.func, ast.Attribute) and \
+            node.func.attr == "get_lock":
+        return ast.unparse(node)
+    seg = _last_segment(node).lower()
+    if any(w in seg for w in _LOCK_WORDS):
+        return ast.unparse(node)
+    return None
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _is_blocking(call: ast.Call) -> Tuple[bool, str]:
+    """(blocks unboundedly, receiver description) for a method call."""
+    if not isinstance(call.func, ast.Attribute):
+        return False, ""
+    attr = call.func.attr
+    if attr not in _BLOCKING_ATTRS:
+        return False, ""
+    recv = ast.unparse(call.func.value)
+    if attr == "get":
+        # dict.get(key, default) carries positional args; Queue.get()
+        # with a timeout kwarg is bounded.
+        blocks = not call.args and _kw(call, "timeout") is None \
+            and _kw(call, "block") is None
+    elif attr == "put":
+        blocks = _kw(call, "timeout") is None and _kw(call, "block") is None
+    elif attr == "join":
+        # str.join(parts) carries an arg; Thread/Process.join() does not.
+        blocks = not call.args and _kw(call, "timeout") is None
+    elif attr == "acquire":
+        blocks = not call.args and _kw(call, "timeout") is None \
+            and _kw(call, "blocking") is None
+    else:  # wait
+        blocks = not call.args and _kw(call, "timeout") is None
+    return blocks, f"{recv}.{attr}"
+
+
+@dataclass
+class _LockGraph:
+    """A -> B edges meaning B was acquired while A was held."""
+    edges: Dict[str, Set[str]] = field(default_factory=dict)
+    sites: Dict[Tuple[str, str], ast.AST] = field(default_factory=dict)
+
+    def add(self, held: str, acquired: str, node: ast.AST) -> None:
+        self.edges.setdefault(held, set()).add(acquired)
+        self.sites.setdefault((held, acquired), node)
+
+    def cycles(self) -> List[List[str]]:
+        """Each cycle as the node path [a, b, ..., a], deterministically."""
+        out: List[List[str]] = []
+        seen_cycles: Set[Tuple[str, ...]] = set()
+
+        def dfs(node: str, path: List[str], on_path: Set[str]) -> None:
+            for nxt in sorted(self.edges.get(node, ())):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):] + [nxt]
+                    key = tuple(sorted(cyc[:-1]))
+                    if key not in seen_cycles:
+                        seen_cycles.add(key)
+                        out.append(cyc)
+                    continue
+                dfs(nxt, path + [nxt], on_path | {nxt})
+
+        for start in sorted(self.edges):
+            dfs(start, [start], {start})
+        return out
+
+
+class _HeldWalker:
+    """Walks one function's statements tracking which locks are held.
+
+    `with lock:` holds for the body; `lock.acquire()` holds until a
+    matching `lock.release()` in the same suite (or the suite ends).
+    """
+
+    def __init__(self, graph: _LockGraph):
+        self.graph = graph
+        self.held: List[str] = []                 # acquisition order
+        self.blocking: List[Tuple[ast.Call, str, str]] = []  # node, what, lock
+
+    # -- acquisition bookkeeping ---------------------------------------
+    def _acquire(self, lock: str, node: ast.AST) -> None:
+        for h in self.held:
+            if h != lock:
+                self.graph.add(h, lock, node)
+        self.held.append(lock)
+
+    def _release(self, lock: str) -> None:
+        if lock in self.held:
+            self.held.remove(lock)
+
+    # -- statement traversal -------------------------------------------
+    def walk_suite(self, body: List[ast.stmt]) -> None:
+        entered = len(self.held)
+        for stmt in body:
+            self._walk_stmt(stmt)
+        # acquire() without release() does not leak past its suite
+        del self.held[entered:]
+
+    def _walk_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            locks = []
+            for item in stmt.items:
+                lock = _lock_expr(item.context_expr)
+                if lock is not None:
+                    self._acquire(lock, item.context_expr)
+                    locks.append(lock)
+                else:
+                    self._scan_expr(item.context_expr)
+            self.walk_suite(stmt.body)
+            for lock in reversed(locks):
+                self._release(lock)
+            return
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            call = stmt.value
+            if isinstance(call.func, ast.Attribute):
+                recv_lock = _lock_expr(call.func.value)
+                if recv_lock is not None and call.func.attr == "acquire":
+                    self._scan_expr(call)       # may itself block
+                    self._acquire(recv_lock, call)
+                    return
+                if recv_lock is not None and call.func.attr == "release":
+                    self._release(recv_lock)
+                    return
+        # nested suites: functions defined inline run later, on their
+        # own stack — analyze them with a fresh held-set.
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner = _HeldWalker(self.graph)
+            inner.walk_suite(stmt.body)
+            self.blocking.extend(inner.blocking)
+            return
+        for expr in ast.iter_child_nodes(stmt):
+            if isinstance(expr, ast.expr):
+                self._scan_expr(expr)
+        for attr in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, attr, None)
+            if sub:
+                self.walk_suite(sub)
+        for handler in getattr(stmt, "handlers", []) or []:
+            self.walk_suite(handler.body)
+
+    def _scan_expr(self, expr: ast.expr) -> None:
+        if not self.held:
+            return
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                blocks, what = _is_blocking(node)
+                if blocks and what:
+                    # re-acquiring a held lock is a deadlock too, but the
+                    # interesting report is the blocking call itself
+                    self.blocking.append((node, what, self.held[-1]))
+
+
+def _analyze(mod: ModuleInfo) -> Tuple[_LockGraph, List[Tuple[ast.Call, str, str]]]:
+    graph = _LockGraph()
+    blocking: List[Tuple[ast.Call, str, str]] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            walker = _HeldWalker(graph)
+            walker.walk_suite(node.body)
+            blocking.extend(walker.blocking)
+    return graph, blocking
+
+
+class _ConcScoped(Rule):
+    def applies(self, path: str) -> bool:
+        return in_concurrency_scope(path)
+
+
+class LockOrderCycle(_ConcScoped):
+    id = "lock-order-cycle"
+    doc = ("the per-module lock-acquisition graph must be acyclic: a "
+           "cycle A->B->A deadlocks under the right interleaving")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        graph, _ = _analyze(mod)
+        for cycle in graph.cycles():
+            site = graph.sites.get((cycle[0], cycle[1]), mod.tree)
+            yield self.finding(
+                mod, site,
+                f"lock-order cycle {' -> '.join(cycle)}; impose one "
+                f"global acquisition order")
+
+
+class BlockingWhileLocked(_ConcScoped):
+    id = "blocking-while-locked"
+    doc = ("no unbounded blocking call (get/put/join/wait/acquire without "
+           "timeout) while holding a lock")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        _, blocking = _analyze(mod)
+        for node, what, lock in blocking:
+            yield self.finding(
+                mod, node,
+                f"unbounded {what}() while holding {lock}; a stalled "
+                f"counterpart freezes every thread waiting on the lock — "
+                f"use a timeout and re-check, or move the call outside "
+                f"the critical section")

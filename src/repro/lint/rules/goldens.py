@@ -1,0 +1,71 @@
+"""Golden stability: telemetry records only grow with None defaults.
+
+Telemetry and RunResult are serialized into golden JSON files that CI
+compares byte-for-byte. A new field with a live default (0.0, "", [])
+changes every serialized record and invalidates every golden at once;
+a new field defaulting to None keeps old records parseable and old
+goldens byte-identical (the serializer drops Nones). The baseline
+field sets below are the PR-2 shapes the first goldens were pinned
+against — fields in the baseline keep their original defaults, fields
+added since must default None.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint.findings import Finding
+from repro.lint.rules import ModuleInfo, Rule
+
+# The field sets the first goldens were pinned against (PR 2). Do not
+# grow these sets: that is the point of the rule.
+_BASELINES = {
+    "Telemetry": frozenset({
+        "throughput", "mem_mb", "used_cpus", "oom", "restarting", "extras",
+    }),
+    "RunResult": frozenset({
+        "throughput", "used_cpus", "mem_mb", "oom_count", "extras",
+    }),
+}
+
+
+class GoldenFieldDefault(Rule):
+    id = "golden-field-default"
+    doc = ("fields added to Telemetry/RunResult after the golden baseline "
+           "must default to None so pinned goldens stay byte-identical")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            baseline = _BASELINES.get(node.name)
+            if baseline is None:
+                continue
+            for item in node.body:
+                if not isinstance(item, ast.AnnAssign):
+                    continue
+                name = item.target.id if isinstance(item.target, ast.Name) \
+                    else None
+                if name is None or name.startswith("_") or name in baseline:
+                    continue
+                if not _defaults_to_none(item.value):
+                    yield self.finding(
+                        mod, item,
+                        f"{node.name}.{name} is post-baseline but does not "
+                        f"default to None; a live default rewrites every "
+                        f"pinned golden record")
+
+
+def _defaults_to_none(value) -> bool:
+    if value is None:
+        return False                  # no default at all: also breaks goldens
+    if isinstance(value, ast.Constant) and value.value is None:
+        return True
+    # field(default=None, ...) spelling
+    if isinstance(value, ast.Call) and isinstance(value.func, ast.Name) \
+            and value.func.id == "field":
+        for kw in value.keywords:
+            if kw.arg == "default" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is None:
+                return True
+    return False

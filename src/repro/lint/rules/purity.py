@@ -1,0 +1,159 @@
+"""Sim-plane purity: the golden-pinned modules stay deterministic.
+
+The analytic plane (PipelineSim / FleetSim / ArrivalProcess and the
+whole control plane under core/) is scored by same-seed golden files
+that CI asserts byte-identical. That only holds while every number those
+modules produce is a pure function of (spec, seed, tick): one
+`time.time()` in a scoring path, one module-level `np.random.rand()`,
+one thread whose scheduling order leaks into accumulation order, and
+the goldens become host-dependent — exactly the drift Zhao et al. warn
+voids an offline model's authority over online decisions.
+
+Wall-clock reads that feed a *log line* and nothing else are the
+sanctioned exception; they carry a pragma whose reason says so.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint.findings import Finding
+from repro.lint.rules import ModuleInfo, Rule, in_sim_plane
+
+# time-module attributes that read a host clock
+_WALL_ATTRS = frozenset({
+    "time", "time_ns", "monotonic", "monotonic_ns", "perf_counter",
+    "perf_counter_ns", "process_time", "process_time_ns", "clock",
+    "clock_gettime", "clock_gettime_ns",
+})
+_THREAD_MODULES = frozenset({
+    "threading", "_thread", "multiprocessing", "concurrent", "asyncio",
+})
+# seeded-RNG constructors: allowed iff called with an explicit seed arg
+_SEEDED_CTORS = frozenset({
+    "RandomState", "default_rng", "SeedSequence", "Generator",
+})
+_NUMPY_NAMES = frozenset({"np", "numpy"})
+
+
+def _attr_on(node: ast.AST, base: str) -> str:
+    """'attr' when node is `<base>.attr`, else ''."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == base:
+        return node.attr
+    return ""
+
+
+class _SimScoped(Rule):
+    def applies(self, path: str) -> bool:
+        return in_sim_plane(path)
+
+
+class SimWallClock(_SimScoped):
+    id = "sim-wall-clock"
+    doc = ("sim-plane modules must not read a host clock (time.time / "
+           "monotonic / perf_counter / ...): goldens must be a pure "
+           "function of (spec, seed, tick)")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and \
+                    _attr_on(node.func, "time") in _WALL_ATTRS:
+                yield self.finding(
+                    mod, node,
+                    f"wall-clock read time.{node.func.attr}() in a "
+                    f"sim-plane module; derive time from the tick "
+                    f"counter (or pragma a log-only read)")
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in _WALL_ATTRS:
+                        yield self.finding(
+                            mod, node,
+                            f"imports wall clock time.{alias.name} into a "
+                            f"sim-plane module")
+
+
+class SimSleep(_SimScoped):
+    id = "sim-sleep"
+    doc = ("sim-plane modules must not sleep: simulated time advances by "
+           "tick, never by the host scheduler")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and \
+                    _attr_on(node.func, "time") == "sleep":
+                yield self.finding(
+                    mod, node, "time.sleep() in a sim-plane module; the "
+                    "sim's clock is the tick counter")
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name == "sleep":
+                        yield self.finding(
+                            mod, node,
+                            "imports time.sleep into a sim-plane module")
+
+
+class SimThreadImport(_SimScoped):
+    id = "sim-thread-import"
+    doc = ("sim-plane modules must not import threading/multiprocessing: "
+           "scheduling order must never reach golden-pinned accumulation "
+           "order")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    root = alias.name.split(".")[0]
+                    if root in _THREAD_MODULES:
+                        yield self.finding(
+                            mod, node,
+                            f"imports {alias.name} in a sim-plane module; "
+                            f"concurrency belongs to the executor planes")
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                root = node.module.split(".")[0]
+                if root in _THREAD_MODULES:
+                    yield self.finding(
+                        mod, node,
+                        f"imports from {node.module} in a sim-plane module; "
+                        f"concurrency belongs to the executor planes")
+
+
+class SimUnseededRng(_SimScoped):
+    id = "sim-unseeded-rng"
+    doc = ("sim-plane randomness must flow from an explicit seed: no "
+           "module-level random.*/np.random.* draws, no seedless "
+           "RandomState()/default_rng()")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            # random.<fn>(...) — the stdlib module's hidden global state
+            attr = _attr_on(func, "random")
+            if attr:
+                if attr in ("Random", "SystemRandom") and node.args:
+                    continue          # random.Random(seed) is seeded
+                yield self.finding(
+                    mod, node,
+                    f"random.{attr}() draws from the stdlib's global RNG; "
+                    f"thread an explicit seeded generator through instead")
+                continue
+            # np.random.<fn>(...) — numpy's hidden global state
+            if isinstance(func, ast.Attribute) and \
+                    isinstance(func.value, ast.Attribute) and \
+                    isinstance(func.value.value, ast.Name) and \
+                    func.value.value.id in _NUMPY_NAMES and \
+                    func.value.attr == "random":
+                if func.attr in _SEEDED_CTORS and node.args:
+                    continue          # np.random.RandomState(seed) et al.
+                if func.attr in _SEEDED_CTORS:
+                    yield self.finding(
+                        mod, node,
+                        f"np.random.{func.attr}() without an explicit "
+                        f"seed; pass the spec/ctor seed through")
+                else:
+                    yield self.finding(
+                        mod, node,
+                        f"np.random.{func.attr}() draws from numpy's "
+                        f"global RNG; use a seeded RandomState/Generator")

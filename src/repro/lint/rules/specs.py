@@ -1,0 +1,122 @@
+"""Spec hygiene: specs are frozen values, defaults are immutable.
+
+Specs (PipelineSpec, StageSpec, MachineSpec, ...) are the keys of every
+golden file and every cache in the repo: two runs agree iff their specs
+compare equal. A mutable spec invites in-place edits that alias across
+a sweep grid; a mutable default (the classic `def f(x, xs=[])`) shares
+one object across every call. Both families are enforced here rather
+than by convention.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.lint.findings import Finding
+from repro.lint.rules import ModuleInfo, Rule
+
+_SPEC_SUFFIXES = ("Spec", "Event")
+_MUTABLE_CTORS = frozenset({"list", "dict", "set", "bytearray"})
+
+
+def _dataclass_decorator(node: ast.ClassDef) -> Optional[ast.AST]:
+    """The @dataclass / @dataclass(...) decorator node, if present."""
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = target.attr if isinstance(target, ast.Attribute) else \
+            target.id if isinstance(target, ast.Name) else ""
+        if name == "dataclass":
+            return dec
+    return None
+
+
+def _is_frozen(dec: ast.AST) -> bool:
+    if not isinstance(dec, ast.Call):
+        return False
+    for kw in dec.keywords:
+        if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return False
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in _MUTABLE_CTORS and not node.args
+            and not node.keywords)
+
+
+class SpecFrozen(Rule):
+    id = "spec-frozen"
+    doc = ("dataclasses named *Spec / *Event must be frozen=True: specs "
+           "are golden-file keys and must never alias-mutate")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not node.name.endswith(_SPEC_SUFFIXES):
+                continue
+            dec = _dataclass_decorator(node)
+            if dec is not None and not _is_frozen(dec):
+                yield self.finding(
+                    mod, node,
+                    f"dataclass {node.name!r} is spec-named but not "
+                    f"frozen=True; specs key goldens and caches, so "
+                    f"in-place mutation silently invalidates both")
+
+
+class MutableDefault(Rule):
+    id = "mutable-default"
+    doc = ("no mutable default values: [] / {} / set() in function params "
+           "or dataclass fields share one object across all calls")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_func(mod, node)
+            elif isinstance(node, ast.ClassDef) and \
+                    _dataclass_decorator(node) is not None:
+                yield from self._check_dataclass(mod, node)
+
+    def _check_func(self, mod: ModuleInfo, node) -> Iterator[Finding]:
+        args = node.args
+        defaults = list(args.defaults) + \
+            [d for d in args.kw_defaults if d is not None]
+        for default in defaults:
+            if _is_mutable_literal(default):
+                yield self.finding(
+                    mod, default,
+                    f"mutable default in {node.name}(); one object is "
+                    f"shared across every call — default to None or use "
+                    f"a factory")
+
+    def _check_dataclass(self, mod: ModuleInfo, node: ast.ClassDef
+                         ) -> Iterator[Finding]:
+        for item in node.body:
+            if not isinstance(item, ast.AnnAssign) or item.value is None:
+                continue
+            value = item.value
+            # field(default_factory=list) is the sanctioned spelling;
+            # field(default=[]) is not.
+            if isinstance(value, ast.Call) and \
+                    isinstance(value.func, ast.Name) and \
+                    value.func.id == "field":
+                for kw in value.keywords:
+                    if kw.arg == "default" and _is_mutable_literal(kw.value):
+                        yield self.finding(
+                            mod, kw.value,
+                            f"field(default=<mutable>) on "
+                            f"{node.name}.{_target_name(item)}; use "
+                            f"default_factory")
+            elif _is_mutable_literal(value):
+                yield self.finding(
+                    mod, value,
+                    f"mutable class-level default on "
+                    f"{node.name}.{_target_name(item)}; all instances "
+                    f"share it — use field(default_factory=...)")
+
+
+def _target_name(item: ast.AnnAssign) -> str:
+    return item.target.id if isinstance(item.target, ast.Name) else "<field>"

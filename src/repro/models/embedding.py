@@ -14,7 +14,6 @@ standard industrial trick (QR-hashing is the documented extension).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Params per layer: W_self (d_in, d_out), W_neigh (d_in, d_out), bias.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,15 +16,13 @@ Capacity semantics: per-expert capacity C = ceil(T_local * top_k * cf / E)
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import activation
-
 from repro.common.shardlib import compat_shard_map as _shard_map
+from repro.models.layers import activation
 
 P = jax.sharding.PartitionSpec
 

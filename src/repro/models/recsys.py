@@ -20,7 +20,7 @@ Embedding tables are stacked (F, V, D), row-sharded over `model`
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

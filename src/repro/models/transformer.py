@@ -19,7 +19,6 @@ A parallel "logical axes" tree maps each dim to a sharding rule name
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -24,7 +24,6 @@ import shutil
 import time
 from typing import Any, Optional
 
-import jax
 import numpy as np
 
 

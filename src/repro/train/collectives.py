@@ -17,7 +17,6 @@ benchmarks/collectives_bench.py scores it.
 """
 from __future__ import annotations
 
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

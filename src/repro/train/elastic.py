@@ -9,7 +9,7 @@ new CPU pool (that last part is automatic — it's the paper's entire point).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import numpy as np

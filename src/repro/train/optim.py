@@ -15,8 +15,7 @@ the optimizer state so it shards exactly like the parameters it mirrors.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

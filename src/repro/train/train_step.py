@@ -6,8 +6,7 @@ the memory knob the §Perf hillclimbs use on the train_4k cells.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

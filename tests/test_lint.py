@@ -1,0 +1,565 @@
+"""repro.lint: per-rule bad/good fixtures, the pragma allowlist
+round-trip, the JSON report schema, and the tier-1 gate that the repo
+itself lints clean.
+
+Every rule is tested in BOTH directions — a known-bad snippet that must
+fire and a known-good snippet that must not — so a rule can neither
+silently stop firing nor start flagging sanctioned idioms.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.lint import ALL_RULES, lint_paths, lint_source
+from repro.lint.findings import BAD_PRAGMA, PARSE_ERROR, UNUSED_PRAGMA
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SIM = "pkg/data/simulator.py"          # a sim-plane-scoped path
+CORE = "pkg/core/controller.py"        # also sim-plane (core/*)
+CONC = "pkg/data/executor.py"          # a concurrency-scoped path
+PLAIN = "pkg/tools/misc.py"            # out of every special scope
+
+
+def rules_of(path, src, **kw):
+    """Set of unsuppressed rule ids lint_source reports."""
+    return {f.rule for f in lint_source(path, textwrap.dedent(src), **kw)
+            if not f.suppressed}
+
+
+# ---------------------------------------------------------------------------
+# sim-plane purity
+# ---------------------------------------------------------------------------
+
+class TestSimPurity:
+    def test_wall_clock_fires_in_sim_plane(self):
+        src = "import time\nt = time.time()\n"
+        assert "sim-wall-clock" in rules_of(SIM, src)
+        assert "sim-wall-clock" in rules_of(CORE, src)
+
+    def test_wall_clock_ignored_outside_sim_plane(self):
+        src = "import time\nt = time.monotonic()\n"
+        assert "sim-wall-clock" not in rules_of(PLAIN, src)
+
+    def test_wall_clock_from_import(self):
+        src = "from time import perf_counter\n"
+        assert "sim-wall-clock" in rules_of(SIM, src)
+
+    def test_tick_arithmetic_is_clean(self):
+        src = "def step(tick, dt):\n    return tick * dt\n"
+        assert rules_of(SIM, src) == set()
+
+    def test_sleep_fires(self):
+        src = "import time\ntime.sleep(0.1)\n"
+        assert "sim-sleep" in rules_of(SIM, src)
+
+    def test_sleep_allowed_in_executor_plane(self):
+        src = "import time\ntime.sleep(0.1)\n"
+        assert "sim-sleep" not in rules_of(PLAIN, src)
+
+    def test_thread_import_fires(self):
+        assert "sim-thread-import" in rules_of(SIM, "import threading\n")
+        assert "sim-thread-import" in rules_of(
+            CORE, "from multiprocessing import Queue\n")
+
+    def test_thread_import_fine_elsewhere(self):
+        assert "sim-thread-import" not in rules_of(
+            PLAIN, "import threading\n")
+
+    def test_unseeded_numpy_fires(self):
+        src = "import numpy as np\nx = np.random.rand(3)\n"
+        assert "sim-unseeded-rng" in rules_of(SIM, src)
+
+    def test_seedless_ctor_fires(self):
+        src = "import numpy as np\nrng = np.random.default_rng()\n"
+        assert "sim-unseeded-rng" in rules_of(SIM, src)
+
+    def test_seeded_ctor_is_clean(self):
+        src = ("import numpy as np\n"
+               "rng = np.random.RandomState(7)\n"
+               "g = np.random.default_rng(11)\n")
+        assert "sim-unseeded-rng" not in rules_of(SIM, src)
+
+    def test_stdlib_global_rng_fires(self):
+        assert "sim-unseeded-rng" in rules_of(
+            SIM, "import random\nx = random.random()\n")
+
+    def test_seeded_stdlib_rng_is_clean(self):
+        assert "sim-unseeded-rng" not in rules_of(
+            SIM, "import random\nr = random.Random(3)\n")
+
+
+# ---------------------------------------------------------------------------
+# forbidden APIs
+# ---------------------------------------------------------------------------
+
+class TestForbiddenApis:
+    def test_cancel_join_thread_fires_everywhere(self):
+        src = "def teardown(q):\n    q.cancel_join_thread()\n"
+        assert "no-cancel-join-thread" in rules_of(PLAIN, src)
+
+    def test_plain_close_is_clean(self):
+        src = "def teardown(q):\n    q.close()\n    q.join_thread()\n"
+        assert "no-cancel-join-thread" not in rules_of(PLAIN, src)
+
+    def test_bare_mp_queue_fires(self):
+        src = "import multiprocessing as mp\nq = mp.Queue()\n"
+        assert "mp-queue-protocol" in rules_of(PLAIN, src)
+
+    def test_mp_queue_in_class_without_shutdown_fires(self):
+        src = """\
+        import multiprocessing as mp
+        class Pool:
+            def __init__(self):
+                self.q = mp.Queue()
+        """
+        assert "mp-queue-protocol" in rules_of(PLAIN, src)
+
+    def test_mp_queue_inside_shutdown_protocol_is_clean(self):
+        src = """\
+        import multiprocessing as mp
+        class Pipeline:
+            def __init__(self, ctx):
+                self.q = mp.Queue()
+                self.out = ctx.SimpleQueue()
+            def shutdown(self, drain=True):
+                pass
+        """
+        assert "mp-queue-protocol" not in rules_of(PLAIN, src)
+
+    def test_threading_queue_not_confused_with_mp(self):
+        src = "import queue\nq = queue.Queue()\n"
+        assert "mp-queue-protocol" not in rules_of(PLAIN, src)
+
+
+# ---------------------------------------------------------------------------
+# spec hygiene
+# ---------------------------------------------------------------------------
+
+class TestSpecHygiene:
+    def test_unfrozen_spec_fires(self):
+        src = """\
+        from dataclasses import dataclass
+        @dataclass
+        class StageSpec:
+            rate: float = 1.0
+        """
+        assert "spec-frozen" in rules_of(PLAIN, src)
+
+    def test_frozen_spec_is_clean(self):
+        src = """\
+        from dataclasses import dataclass
+        @dataclass(frozen=True)
+        class StageSpec:
+            rate: float = 1.0
+        """
+        assert "spec-frozen" not in rules_of(PLAIN, src)
+
+    def test_non_spec_dataclass_may_be_mutable(self):
+        src = """\
+        from dataclasses import dataclass
+        @dataclass
+        class Allocation:
+            workers: int = 0
+        """
+        assert "spec-frozen" not in rules_of(PLAIN, src)
+
+    def test_mutable_function_default_fires(self):
+        src = "def f(xs=[]):\n    return xs\n"
+        assert "mutable-default" in rules_of(PLAIN, src)
+
+    def test_mutable_kwonly_default_fires(self):
+        src = "def f(*, cfg={}):\n    return cfg\n"
+        assert "mutable-default" in rules_of(PLAIN, src)
+
+    def test_none_default_is_clean(self):
+        src = "def f(xs=None):\n    return xs or []\n"
+        assert "mutable-default" not in rules_of(PLAIN, src)
+
+    def test_dataclass_field_default_mutable_fires(self):
+        src = """\
+        from dataclasses import dataclass, field
+        @dataclass
+        class Box:
+            items: list = field(default=[])
+        """
+        assert "mutable-default" in rules_of(PLAIN, src)
+
+    def test_default_factory_is_clean(self):
+        src = """\
+        from dataclasses import dataclass, field
+        @dataclass
+        class Box:
+            items: list = field(default_factory=list)
+        """
+        assert "mutable-default" not in rules_of(PLAIN, src)
+
+
+# ---------------------------------------------------------------------------
+# golden stability
+# ---------------------------------------------------------------------------
+
+class TestGoldenStability:
+    def test_post_baseline_field_with_live_default_fires(self):
+        src = """\
+        from dataclasses import dataclass
+        @dataclass
+        class Telemetry:
+            throughput: float = 0.0
+            feed_stall_s: float = 0.0
+        """
+        assert "golden-field-default" in rules_of(PLAIN, src)
+
+    def test_post_baseline_field_without_default_fires(self):
+        src = """\
+        from dataclasses import dataclass
+        @dataclass
+        class RunResult:
+            throughput: float
+            brand_new: float
+        """
+        assert "golden-field-default" in rules_of(PLAIN, src)
+
+    def test_none_default_is_clean(self):
+        src = """\
+        from dataclasses import dataclass
+        from typing import Optional
+        @dataclass
+        class Telemetry:
+            throughput: float = 0.0
+            feed_stall_s: Optional[float] = None
+        """
+        assert "golden-field-default" not in rules_of(PLAIN, src)
+
+    def test_baseline_fields_keep_live_defaults(self):
+        src = """\
+        from dataclasses import dataclass, field
+        @dataclass
+        class RunResult:
+            throughput: float = 0.0
+            oom_count: int = 0
+            extras: dict = field(default_factory=dict)
+        """
+        assert "golden-field-default" not in rules_of(PLAIN, src)
+
+    def test_other_classes_unconstrained(self):
+        src = """\
+        from dataclasses import dataclass
+        @dataclass
+        class Snapshot:
+            anything: float = 1.0
+        """
+        assert "golden-field-default" not in rules_of(PLAIN, src)
+
+
+# ---------------------------------------------------------------------------
+# concurrency analysis
+# ---------------------------------------------------------------------------
+
+class TestConcurrency:
+    def test_lock_order_cycle_fires(self):
+        src = """\
+        def a(self):
+            with self.lock_a:
+                with self.lock_b:
+                    pass
+        def b(self):
+            with self.lock_b:
+                with self.lock_a:
+                    pass
+        """
+        assert "lock-order-cycle" in rules_of(CONC, src)
+
+    def test_consistent_order_is_clean(self):
+        src = """\
+        def a(self):
+            with self.lock_a:
+                with self.lock_b:
+                    pass
+        def b(self):
+            with self.lock_a:
+                with self.lock_b:
+                    pass
+        """
+        assert "lock-order-cycle" not in rules_of(CONC, src)
+
+    def test_three_way_cycle_fires(self):
+        src = """\
+        def f(self):
+            with self.a_lock:
+                with self.b_lock:
+                    pass
+        def g(self):
+            with self.b_lock:
+                with self.c_lock:
+                    pass
+        def h(self):
+            with self.c_lock:
+                with self.a_lock:
+                    pass
+        """
+        assert "lock-order-cycle" in rules_of(CONC, src)
+
+    def test_acquire_release_builds_edges(self):
+        src = """\
+        def f(self):
+            self.a_lock.acquire()
+            self.b_lock.acquire()
+            self.b_lock.release()
+            self.a_lock.release()
+        def g(self):
+            with self.b_lock:
+                with self.a_lock:
+                    pass
+        """
+        assert "lock-order-cycle" in rules_of(CONC, src)
+
+    def test_blocking_get_under_lock_fires(self):
+        src = """\
+        def f(self, q):
+            with self._lock:
+                item = q.get()
+        """
+        assert "blocking-while-locked" in rules_of(CONC, src)
+
+    def test_get_with_timeout_is_clean(self):
+        src = """\
+        def f(self, q):
+            with self._lock:
+                item = q.get(timeout=0.05)
+        """
+        assert "blocking-while-locked" not in rules_of(CONC, src)
+
+    def test_dict_get_not_confused_with_queue_get(self):
+        src = """\
+        def f(self, d):
+            with self._lock:
+                return d.get("key", None)
+        """
+        assert "blocking-while-locked" not in rules_of(CONC, src)
+
+    def test_join_under_lock_fires(self):
+        src = """\
+        def f(self, proc):
+            with self.state_lock:
+                proc.join()
+        """
+        assert "blocking-while-locked" in rules_of(CONC, src)
+
+    def test_str_join_is_clean(self):
+        src = """\
+        def f(self, names):
+            with self.state_lock:
+                return ",".join(names)
+        """
+        assert "blocking-while-locked" not in rules_of(CONC, src)
+
+    def test_blocking_outside_lock_is_clean(self):
+        src = """\
+        def f(self, q):
+            item = q.get()
+            with self._lock:
+                self.items.append(item)
+        """
+        assert "blocking-while-locked" not in rules_of(CONC, src)
+
+    def test_release_clears_held_state(self):
+        src = """\
+        def f(self, q):
+            self._lock.acquire()
+            self._lock.release()
+            item = q.get()
+        """
+        assert "blocking-while-locked" not in rules_of(CONC, src)
+
+    def test_inner_def_does_not_inherit_held_locks(self):
+        # a closure defined under a lock runs later, on its own stack
+        src = """\
+        def f(self, q):
+            with self._lock:
+                def worker():
+                    return q.get()
+                self.fn = worker
+        """
+        assert "blocking-while-locked" not in rules_of(CONC, src)
+
+    def test_concurrency_rules_scoped_to_executor_modules(self):
+        src = """\
+        def f(self, q):
+            with self._lock:
+                item = q.get()
+        """
+        assert "blocking-while-locked" not in rules_of(PLAIN, src)
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+class TestPragmas:
+    BAD = ("import time\n"
+           "t = time.time()  # lint: allow[sim-wall-clock] -- test reason\n")
+
+    def test_same_line_pragma_suppresses(self):
+        findings = lint_source(SIM, self.BAD)
+        wall = [f for f in findings if f.rule == "sim-wall-clock"]
+        assert wall and all(f.suppressed for f in wall)
+
+    def test_own_line_pragma_covers_next_code_line(self):
+        src = ("import time\n"
+               "# lint: allow[sim-wall-clock] -- test reason\n"
+               "t = time.time()\n")
+        findings = lint_source(SIM, src)
+        wall = [f for f in findings if f.rule == "sim-wall-clock"]
+        assert wall and all(f.suppressed for f in wall)
+
+    def test_no_pragmas_flag_restores_finding(self):
+        # the delete-any-pragma direction: without the allowlist the
+        # violation is live again
+        assert "sim-wall-clock" in rules_of(SIM, self.BAD,
+                                            respect_pragmas=False)
+
+    def test_reasonless_pragma_is_a_finding(self):
+        src = ("import time\n"
+               "t = time.time()  # lint: allow[sim-wall-clock]\n")
+        assert BAD_PRAGMA in rules_of(SIM, src)
+
+    def test_unknown_rule_pragma_is_a_finding(self):
+        src = "x = 1  # lint: allow[no-such-rule] -- whatever\n"
+        assert BAD_PRAGMA in rules_of(PLAIN, src)
+
+    def test_unused_pragma_is_a_finding(self):
+        src = "x = 1  # lint: allow[sim-wall-clock] -- covers nothing\n"
+        assert UNUSED_PRAGMA in rules_of(PLAIN, src)
+
+    def test_pragma_in_string_literal_ignored(self):
+        src = 's = "# lint: allow[sim-wall-clock] -- not a comment"\n'
+        findings = lint_source(PLAIN, src)
+        assert findings == []
+
+    def test_pragma_suppresses_only_named_rule(self):
+        src = ("import time\n"
+               "t = time.time()  # lint: allow[sim-sleep] -- wrong rule\n")
+        ids = rules_of(SIM, src)
+        assert "sim-wall-clock" in ids          # still live
+        assert UNUSED_PRAGMA in ids             # and the pragma is stale
+
+    def test_meta_rules_cannot_be_suppressed(self):
+        # a pragma naming bad-pragma is itself malformed (unknown rule)
+        src = "x = 1  # lint: allow[bad-pragma] -- nope\n"
+        assert BAD_PRAGMA in rules_of(PLAIN, src)
+
+
+# ---------------------------------------------------------------------------
+# engine + CLI
+# ---------------------------------------------------------------------------
+
+class TestEngine:
+    def test_syntax_error_reports_parse_error(self):
+        assert PARSE_ERROR in rules_of(PLAIN, "def broken(:\n")
+
+    def test_lint_paths_walks_directories(self, tmp_path):
+        pkg = tmp_path / "data"
+        pkg.mkdir()
+        (pkg / "simulator.py").write_text("import time\nt = time.time()\n")
+        (pkg / "other.py").write_text("x = 1\n")
+        report = lint_paths([str(tmp_path)])
+        assert report.files_checked == 2
+        assert {f.rule for f in report.unsuppressed} == {"sim-wall-clock"}
+
+    def test_report_json_schema(self, tmp_path):
+        (tmp_path / "ok.py").write_text("x = 1\n")
+        d = lint_paths([str(tmp_path)]).to_dict()
+        assert set(d) == {"files_checked", "ok", "counts", "findings"}
+        assert set(d["counts"]) == {"total", "suppressed", "unsuppressed"}
+        bad = tmp_path / "data"
+        bad.mkdir()
+        (bad / "fleet.py").write_text("import time\nt = time.time()\n")
+        d = lint_paths([str(tmp_path)]).to_dict()
+        assert d["ok"] is False
+        (f,) = [x for x in d["findings"] if x["rule"] == "sim-wall-clock"]
+        assert set(f) == {"path", "line", "col", "rule", "message",
+                          "suppressed"}
+
+    def test_rule_registry_well_formed(self):
+        ids = [r.id for r in ALL_RULES]
+        assert len(ids) == len(set(ids))
+        assert all(r.id and r.doc for r in ALL_RULES)
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.lint", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+
+
+class TestCli:
+    def test_list_rules(self):
+        proc = _run_cli("--list-rules")
+        assert proc.returncode == 0
+        for rule in ALL_RULES:
+            assert rule.id in proc.stdout
+
+    def test_nonzero_exit_on_finding(self, tmp_path):
+        bad = tmp_path / "core"
+        bad.mkdir()
+        (bad / "model.py").write_text("import time\nt = time.time()\n")
+        proc = _run_cli(str(tmp_path))
+        assert proc.returncode == 1
+        assert "sim-wall-clock" in proc.stdout
+
+    def test_json_output_parses(self, tmp_path):
+        (tmp_path / "ok.py").write_text("x = 1\n")
+        proc = _run_cli("--json", str(tmp_path))
+        assert proc.returncode == 0
+        assert json.loads(proc.stdout)["ok"] is True
+
+
+# ---------------------------------------------------------------------------
+# the tier-1 gate: the repo itself lints clean, and every pragma in it
+# is load-bearing
+# ---------------------------------------------------------------------------
+
+class TestRepoGate:
+    def test_repo_lints_clean(self):
+        proc = _run_cli("--json", "src")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        report = json.loads(proc.stdout)
+        assert report["ok"] is True
+        assert report["counts"]["unsuppressed"] == 0
+
+    def test_every_pragma_is_load_bearing(self):
+        # normal run: zero unused-pragma findings (each pragma suppresses
+        # something). --no-pragmas: each suppression surfaces as a live
+        # finding. Together: deleting any single pragma flips exit to 1.
+        clean = json.loads(_run_cli("--json", "src").stdout)
+        assert not any(f["rule"] == "unused-pragma"
+                       for f in clean["findings"])
+        suppressed = [f for f in clean["findings"] if f["suppressed"]]
+        assert suppressed, "expected the repo's sanctioned exceptions"
+        raw = json.loads(_run_cli("--json", "--no-pragmas", "src").stdout)
+        live = {(f["path"], f["line"], f["rule"])
+                for f in raw["findings"] if not f["suppressed"]}
+        for f in suppressed:
+            assert (f["path"], f["line"], f["rule"]) in live
+
+    def test_reintroduced_violation_fails(self, tmp_path):
+        # put time.time() back into data/simulator.py: the gate must trip
+        src_path = os.path.join(REPO, "src", "repro", "data",
+                                "simulator.py")
+        with open(src_path, encoding="utf-8") as fh:
+            text = fh.read()
+        sandbox = tmp_path / "data"
+        sandbox.mkdir()
+        tainted = text + "\nimport time\n_T0 = time.time()\n"
+        (sandbox / "simulator.py").write_text(tainted)
+        report = lint_paths([str(tmp_path)])
+        assert not report.ok
+        assert any(f.rule == "sim-wall-clock" for f in report.unsuppressed)
