@@ -21,7 +21,16 @@ contracts: an AST rule engine with two analysis families —
                    modules: lock-order cycles, and unbounded blocking
                    calls (`get`/`put`/`join`/`wait`/`acquire` with no
                    timeout) made while holding a lock — the deadlock
-                   class the PR-6 postmortem describes.
+                   class the PR-6 postmortem describes. Since PR 10 the
+                   pass is WHOLE-PROGRAM: `lint/callgraph.py` resolves
+                   project calls (never guessing), `rules/xfn.py`
+                   propagates held-lock sets across them
+                   (`xfn-lock-order-cycle`, `xfn-blocking-while-locked`,
+                   `resource-lifecycle`), and `lint/runtime.py` is the
+                   dynamic cross-check: REPRO_SANITIZE=1 records the
+                   observed lock graph live, and
+                   `python -m repro.lint --runtime-report <json>` fails
+                   on any observed edge the static pass cannot explain.
 
 A violation the repo has *decided* to keep is allowlisted in place:
 

@@ -1,0 +1,440 @@
+"""Best-effort project call graph over a set of parsed modules.
+
+The interprocedural concurrency passes (rules/xfn.py) need to follow a
+call from "function holding lock A" into "function acquiring lock B"
+even when the two live in different modules. This module builds that
+graph with a hard honesty rule: **a call is either resolved by one of
+the mechanical rules below, or it is recorded as unresolved — never
+guessed.** Unresolved calls are first-class output, because they are
+exactly the soundness holes the runtime sanitizer (lint/runtime.py)
+exists to cross-check.
+
+Resolution rules, in order:
+
+  1. `self.m(...)` / `cls.m(...)` inside class C  -> method `m` of C or
+     the nearest project base class that defines it.
+  2. `super().m(...)` inside class C              -> `m` on C's project
+     bases, in declaration order.
+  3. `self.attr.m(...)` where some method of C assigns
+     `self.attr = Klass(...)` (or annotates `self.attr: Klass`) with a
+     single consistent project class -> method `m` of Klass. Conflicting
+     assignments drop the attribute to unresolved.
+  4. `v.m(...)` where `v` is a local single-assigned from `Klass(...)`,
+     or the loop variable of `for v in self.attr:` whose element type is
+     known (from `self.attr: List[Klass]` annotations or
+     `self.attr.append(Klass(...))` sites) -> method `m` of Klass.
+  5. `f(...)` where `f` is a module-level function of the same module,
+     or imported via `from mod import f` from a project module.
+  6. `alias.f(...)` where `import mod as alias` names a project module
+     defining function `f`.
+  7. `Klass(...)` (directly, via import, or as `alias.Klass(...)`)
+     -> `Klass.__init__` when the project defines it.
+
+Module matching for imports is by dotted-suffix: `repro.data.executor`
+matches any loaded file whose path ends `.../repro/data/executor.py`
+(and fixture trees like `pkg/data/executor.py` match `data.executor`).
+
+Decorators, callbacks, `getattr`, thread targets, and values that cross
+a queue are all *not* resolved — see DESIGN.md §13 for the caveat list.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.lint.rules import ModuleInfo
+
+
+@dataclass(frozen=True, order=True)
+class FuncKey:
+    """Stable identity of one project function: module path + qualname
+    (`func` for module functions, `Class.method` for methods)."""
+    module: str
+    qual: str
+
+    def __str__(self) -> str:
+        return f"{_stem(self.module)}.{self.qual}"
+
+
+@dataclass
+class FuncNode:
+    """One defined function: its AST, owning class (if any), module."""
+    key: FuncKey
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    cls: Optional[str]
+    mod: ModuleInfo
+
+
+@dataclass
+class ClassNode:
+    """One defined class: methods by name, textual base names, and the
+    inferred types of its `self.*` attributes."""
+    name: str
+    module: str
+    node: ast.ClassDef
+    methods: Dict[str, FuncKey] = field(default_factory=dict)
+    bases: Tuple[str, ...] = ()
+    # self.attr -> ClassKey of the single consistent assigned type
+    attr_types: Dict[str, "ClassKey"] = field(default_factory=dict)
+    # self.attr -> element ClassKey (List[Klass] annotation / .append site)
+    attr_elem_types: Dict[str, "ClassKey"] = field(default_factory=dict)
+
+
+@dataclass(frozen=True, order=True)
+class ClassKey:
+    module: str
+    name: str
+
+
+_AMBIGUOUS = ClassKey("", "<ambiguous>")
+
+
+def _stem(path: str) -> str:
+    name = path.replace("\\", "/").rsplit("/", 1)[-1]
+    return name[:-3] if name.endswith(".py") else name
+
+
+def _dotted(path: str) -> str:
+    """`src/repro/data/executor.py` -> `src.repro.data.executor`."""
+    p = path.replace("\\", "/")
+    if p.endswith(".py"):
+        p = p[:-3]
+    return p.strip("/").replace("/", ".")
+
+
+def _name_of(node: ast.expr) -> str:
+    """Dotted text of a Name/Attribute chain, '' for anything else."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _name_of(node.value)
+        return f"{base}.{node.attr}" if base else ""
+    return ""
+
+
+def _annotation_class_name(ann: ast.expr) -> str:
+    """The element class named by `Klass`, `List[Klass]`,
+    `Optional[Klass]`, `"Klass"` — one level deep, '' otherwise."""
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.strip()
+    if isinstance(ann, ast.Subscript):
+        return _annotation_class_name(ann.slice)
+    return _name_of(ann)
+
+
+class CallGraph:
+    """The project-wide function/class index plus call resolution."""
+
+    def __init__(self, mods: Sequence[ModuleInfo]):
+        self.mods = list(mods)
+        self.funcs: Dict[FuncKey, FuncNode] = {}
+        self.classes: Dict[ClassKey, ClassNode] = {}
+        # per-module: imported name -> project module path ('' = external)
+        self._imports: Dict[str, Dict[str, str]] = {}
+        # per-module: imported name -> ClassKey / FuncKey in that module
+        self._imported_syms: Dict[str, Dict[str, str]] = {}
+        # dotted-suffix index of loaded modules
+        self._by_dotted: Dict[str, str] = {}
+        self.unresolved: List[Tuple[FuncKey, str, int]] = []
+        for m in mods:
+            self._by_dotted[_dotted(m.path)] = m.path
+        for m in mods:
+            self._index_module(m)
+        for m in mods:
+            self._index_imports(m)
+        for ck, cn in self.classes.items():
+            self._infer_attr_types(cn)
+
+    # ------------------------------------------------------------ indexing --
+    def _index_module(self, mod: ModuleInfo) -> None:
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                key = FuncKey(mod.path, node.name)
+                self.funcs[key] = FuncNode(key, node, None, mod)
+            elif isinstance(node, ast.ClassDef):
+                ck = ClassKey(mod.path, node.name)
+                cn = ClassNode(node.name, mod.path, node,
+                               bases=tuple(_name_of(b) for b in node.bases
+                                           if _name_of(b)))
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        fk = FuncKey(mod.path, f"{node.name}.{item.name}")
+                        self.funcs[fk] = FuncNode(fk, item, node.name, mod)
+                        cn.methods[item.name] = fk
+                self.classes[ck] = cn
+
+    def _index_imports(self, mod: ModuleInfo) -> None:
+        imps: Dict[str, str] = {}
+        syms: Dict[str, str] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    target = self._match_module(alias.name)
+                    if target:
+                        imps[alias.asname or alias.name.split(".")[0]] = \
+                            target
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                target = self._match_module(node.module)
+                if not target:
+                    continue
+                for alias in node.names:
+                    syms[alias.asname or alias.name] = \
+                        f"{target}:{alias.name}"
+        self._imports[mod.path] = imps
+        self._imported_syms[mod.path] = syms
+
+    def _match_module(self, dotted: str) -> str:
+        """Project file whose dotted path ends with `dotted`, '' if none
+        (or ambiguous — never guess)."""
+        hits = [p for d, p in self._by_dotted.items()
+                if d == dotted or d.endswith("." + dotted)]
+        return hits[0] if len(hits) == 1 else ""
+
+    # ------------------------------------------------- attribute inference --
+    def _infer_attr_types(self, cn: ClassNode) -> None:
+        types: Dict[str, ClassKey] = {}
+        elems: Dict[str, ClassKey] = {}
+
+        def note(table: Dict[str, ClassKey], attr: str,
+                 ck: Optional[ClassKey]) -> None:
+            if ck is None:
+                table[attr] = _AMBIGUOUS
+            elif table.get(attr, ck) != ck:
+                table[attr] = _AMBIGUOUS       # conflicting assignments
+            else:
+                table[attr] = ck
+
+        for node in ast.walk(cn.node):
+            tgt: Optional[ast.expr] = None
+            val: Optional[ast.expr] = None
+            ann: Optional[ast.expr] = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, val = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign):
+                tgt, val, ann = node.target, node.value, node.annotation
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "append":
+                recv = node.func.value
+                if isinstance(recv, ast.Attribute) and \
+                        isinstance(recv.value, ast.Name) and \
+                        recv.value.id == "self" and node.args:
+                    ck = self._class_of_call(node.args[0], cn.module)
+                    if ck is not None:
+                        note(elems, recv.attr, ck)
+                continue
+            else:
+                continue
+            if not (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"):
+                continue
+            if ann is not None:
+                name = _annotation_class_name(ann)
+                ck = self.lookup_class(name, cn.module)
+                if ck is not None:
+                    # List[Klass] annotation types the ELEMENTS when the
+                    # value is a container literal, the attr otherwise
+                    if isinstance(ann, ast.Subscript) and \
+                            _name_of(ann.value).split(".")[-1] in (
+                                "List", "list", "Sequence", "Tuple",
+                                "tuple", "Dict", "dict"):
+                        note(elems, tgt.attr, ck)
+                    else:
+                        note(types, tgt.attr, ck)
+                    continue
+            if val is not None:
+                ck = self._class_of_call(val, cn.module)
+                if ck is not None:
+                    note(types, tgt.attr, ck)
+        cn.attr_types = {a: c for a, c in types.items()
+                         if c is not _AMBIGUOUS}
+        cn.attr_elem_types = {a: c for a, c in elems.items()
+                              if c is not _AMBIGUOUS}
+
+    def _class_of_call(self, val: ast.expr,
+                       module: str) -> Optional[ClassKey]:
+        """ClassKey when `val` is `Klass(...)` for a project class."""
+        if not isinstance(val, ast.Call):
+            return None
+        return self.lookup_class(_name_of(val.func), module)
+
+    # ------------------------------------------------------------- lookups --
+    def lookup_class(self, name: str, module: str) -> Optional[ClassKey]:
+        """Resolve a (possibly dotted) class name seen in `module`."""
+        if not name:
+            return None
+        last = name.split(".")[-1]
+        direct = ClassKey(module, name)
+        if direct in self.classes:
+            return direct
+        sym = self._imported_syms.get(module, {}).get(name)
+        if sym:
+            target, _, symname = sym.partition(":")
+            ck = ClassKey(target, symname)
+            if ck in self.classes:
+                return ck
+        if "." in name:
+            head, _, tail = name.partition(".")
+            target = self._imports.get(module, {}).get(head)
+            if target and "." not in tail:
+                ck = ClassKey(target, tail)
+                if ck in self.classes:
+                    return ck
+        # bare name that IS a project class of this module
+        ck = ClassKey(module, last)
+        if name == last and ck in self.classes:
+            return ck
+        return None
+
+    def lookup_method(self, ck: ClassKey, name: str) -> Optional[FuncKey]:
+        """Method `name` on `ck`, walking project base classes."""
+        seen = set()
+        stack = [ck]
+        while stack:
+            cur = stack.pop(0)
+            if cur in seen:
+                continue
+            seen.add(cur)
+            cn = self.classes.get(cur)
+            if cn is None:
+                continue
+            if name in cn.methods:
+                return cn.methods[name]
+            for base in cn.bases:
+                bck = self.lookup_class(base, cur.module)
+                if bck is not None:
+                    stack.append(bck)
+        return None
+
+    def class_of_func(self, fk: FuncKey) -> Optional[ClassKey]:
+        fn = self.funcs.get(fk)
+        if fn is None or fn.cls is None:
+            return None
+        return ClassKey(fk.module, fn.cls)
+
+    # ---------------------------------------------------------- resolution --
+    def local_types(self, fk: FuncKey) -> Dict[str, ClassKey]:
+        """Single-assignment local variable types inside `fk`: direct
+        `v = Klass(...)` construction and `for v in self.attr` loop
+        variables with known element type."""
+        fn = self.funcs.get(fk)
+        if fn is None:
+            return {}
+        module = fk.module
+        own = self.class_of_func(fk)
+        cn = self.classes.get(own) if own is not None else None
+        types: Dict[str, ClassKey] = {}
+
+        def note(name: str, ck: Optional[ClassKey]) -> None:
+            if ck is None:
+                types[name] = _AMBIGUOUS
+            elif types.get(name, ck) != ck:
+                types[name] = _AMBIGUOUS
+            else:
+                types[name] = ck
+
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                ck = self._class_of_call(node.value, module)
+                # any other re-assignment poisons the variable
+                note(name, ck)
+            elif isinstance(node, (ast.For, ast.AsyncFor)) and \
+                    isinstance(node.target, ast.Name):
+                it = node.iter
+                # for v in self.attr / for v in self.attr + other: only
+                # the plain form is typed
+                if cn is not None and isinstance(it, ast.Attribute) and \
+                        isinstance(it.value, ast.Name) and \
+                        it.value.id == "self":
+                    elem = cn.attr_elem_types.get(it.attr)
+                    note(node.target.id, elem)
+                else:
+                    note(node.target.id, None)
+        return {n: c for n, c in types.items() if c is not _AMBIGUOUS}
+
+    def resolve_call(self, caller: FuncKey, call: ast.Call,
+                     local_types: Optional[Dict[str, ClassKey]] = None,
+                     ) -> Optional[FuncKey]:
+        """The callee FuncKey, or None (recorded in `self.unresolved`)."""
+        out = self._resolve(caller, call,
+                            local_types if local_types is not None
+                            else self.local_types(caller))
+        if out is None:
+            text = _name_of(call.func) or ast.unparse(call.func)
+            self.unresolved.append(
+                (caller, text, getattr(call, "lineno", 0)))
+        return out
+
+    def _resolve(self, caller: FuncKey, call: ast.Call,
+                 local_types: Dict[str, ClassKey]) -> Optional[FuncKey]:
+        module = caller.module
+        own_class = self.class_of_func(caller)
+        func = call.func
+        # super().m(...)
+        if isinstance(func, ast.Attribute) and \
+                isinstance(func.value, ast.Call) and \
+                _name_of(func.value.func) == "super" and \
+                own_class is not None:
+            cn = self.classes.get(own_class)
+            for base in (cn.bases if cn else ()):
+                bck = self.lookup_class(base, module)
+                if bck is not None:
+                    mk = self.lookup_method(bck, func.attr)
+                    if mk is not None:
+                        return mk
+            return None
+        name = _name_of(func)
+        if not name:
+            return None
+        parts = name.split(".")
+        # self.m() / cls.m() / self.attr.m() / self.attr chains
+        if parts[0] in ("self", "cls") and own_class is not None:
+            if len(parts) == 2:
+                return self.lookup_method(own_class, parts[1])
+            if len(parts) == 3:
+                cn = self.classes.get(own_class)
+                tck = cn.attr_types.get(parts[1]) if cn else None
+                if tck is not None:
+                    return self.lookup_method(tck, parts[2])
+            return None
+        # v.m() for a typed local
+        if len(parts) == 2 and parts[0] in local_types:
+            return self.lookup_method(local_types[parts[0]], parts[1])
+        # bare f() / Klass()
+        if len(parts) == 1:
+            fk = FuncKey(module, name)
+            if fk in self.funcs:
+                return fk
+            ck = self.lookup_class(name, module)
+            if ck is not None:
+                return self.lookup_method(ck, "__init__")
+            sym = self._imported_syms.get(module, {}).get(name)
+            if sym:
+                target, _, symname = sym.partition(":")
+                ffk = FuncKey(target, symname)
+                if ffk in self.funcs:
+                    return ffk
+                cck = ClassKey(target, symname)
+                if cck in self.classes:
+                    return self.lookup_method(cck, "__init__")
+            return None
+        # alias.f() / alias.Klass() for an imported project module
+        if len(parts) == 2:
+            target = self._imports.get(module, {}).get(parts[0])
+            if target:
+                fk = FuncKey(target, parts[1])
+                if fk in self.funcs:
+                    return fk
+                ck = ClassKey(target, parts[1])
+                if ck in self.classes:
+                    return self.lookup_method(ck, "__init__")
+            # ClassName.m() for a project class in scope
+            ck2 = self.lookup_class(parts[0], module)
+            if ck2 is not None:
+                return self.lookup_method(ck2, parts[1])
+        return None

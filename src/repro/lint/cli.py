@@ -4,6 +4,10 @@ Exit 0 when every finding is pragma-suppressed (with a written reason),
 exit 1 otherwise. `--json` emits the machine-readable report the CI
 lint job archives; `--no-pragmas` ignores the allowlist entirely — the
 acceptance tests use it to prove each pragma is load-bearing.
+`--runtime-report <json>` switches to reconciliation mode: diff a
+sanitizer report (repro.lint.runtime, written by the REPRO_SANITIZE=1
+pytest run) against the static whole-program lock graph and fail on any
+observed edge the static pass cannot account for.
 """
 from __future__ import annotations
 
@@ -12,8 +16,9 @@ import json
 import sys
 from typing import List, Optional
 
-from repro.lint.engine import lint_paths
-from repro.lint.rules import ALL_RULES
+from repro.lint.engine import _iter_py_files, _parse, lint_paths
+from repro.lint.findings import Finding
+from repro.lint.rules import ALL_RULES, ModuleInfo
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -30,12 +35,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                              "every finding as unsuppressed)")
     parser.add_argument("--list-rules", action="store_true",
                         help="print the rule registry and exit")
+    parser.add_argument("--runtime-report", metavar="JSON",
+                        help="reconcile a REPRO_SANITIZE runtime report "
+                             "against the static lock graph of `paths` "
+                             "(exit 1 on any dynamic-only edge)")
     args = parser.parse_args(argv)
 
     if args.list_rules:
         for rule in ALL_RULES:
             print(f"{rule.id:24s} {rule.doc}")
         return 0
+
+    if args.runtime_report:
+        return _reconcile_main(args.runtime_report, args.paths)
 
     report = lint_paths(args.paths, respect_pragmas=not args.no_pragmas)
 
@@ -49,6 +61,46 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"{report.files_checked} files checked: "
               f"{n} finding(s), {sup} suppressed")
     return 0 if report.ok else 1
+
+
+def _reconcile_main(report_path: str, paths: List[str]) -> int:
+    """Static-vs-runtime reconciliation: every observed lock-order edge
+    must be explained by the static graph. A dynamic-only edge means
+    the walker has a blind spot a test just exercised — it is reported
+    as a finding with the ACQUIRING creation site, and fails the run."""
+    from repro.lint.runtime import reconcile
+    try:
+        with open(report_path, encoding="utf-8") as fh:
+            runtime_report = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"error: cannot read runtime report {report_path}: {exc}",
+              file=sys.stderr)
+        return 2
+    mods: List[ModuleInfo] = []
+    for fpath in _iter_py_files(paths):
+        try:
+            with open(fpath, encoding="utf-8") as fh:
+                text = fh.read()
+        except OSError:
+            continue
+        mod = _parse(fpath, text)
+        if isinstance(mod, ModuleInfo):
+            mods.append(mod)
+    result = reconcile(runtime_report, mods)
+    for e in result["dynamic_only"]:
+        path, _, line = e["acquired_site"].rpartition(":")
+        f = Finding(path, int(line or 1), 0, "runtime-edge-unmodeled",
+                    f"observed lock-order edge {e['held']} -> "
+                    f"{e['acquired']} (seen {e['count']}x at runtime) is "
+                    f"absent from the static graph; the interprocedural "
+                    f"walker has a blind spot here — make the acquisition "
+                    f"visible to it or extend the call-graph resolver")
+        print(f.format())
+    print(f"runtime reconciliation: {result['matched']} edge(s) matched, "
+          f"{len(result['dynamic_only'])} dynamic-only, "
+          f"{result['unattributed']} unattributed "
+          f"({result['static_edges']} static edge(s))")
+    return 1 if result["dynamic_only"] else 0
 
 
 if __name__ == "__main__":

@@ -1,22 +1,34 @@
 """The engine: parse files, run applicable rules, apply the allowlist.
 
 `lint_paths` walks files/directories, `lint_source` lints one in-memory
-module (the test fixtures' entry point). Both return a `LintReport`:
-every finding — suppressed ones included, flagged as such — plus the
-pragma problems (`bad-pragma`, `unused-pragma`) and `parse-error`
-findings, which can never be suppressed. The exit-code contract lives
-in `LintReport.ok`: clean means zero unsuppressed findings.
+module (the test fixtures' entry point). Both return findings with the
+pragma allowlist applied: every finding — suppressed ones included,
+flagged as such — plus the pragma problems (`bad-pragma`,
+`unused-pragma`) and `parse-error` findings, which can never be
+suppressed. The exit-code contract lives in `LintReport.ok`: clean
+means zero unsuppressed findings.
+
+Two rule kinds dispatch differently: per-module rules run inside
+`lint_source` file by file; `ProjectRule`s (the interprocedural
+concurrency passes) run once per `lint_paths` call over EVERY parsed
+module, because their call graph must span the whole set. Pragma
+application is therefore centralized here — a pragma in executor.py can
+suppress a finding produced by a whole-program pass just as it does a
+per-module one.
 """
 from __future__ import annotations
 
-import ast
+import hashlib
 import os
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
+import ast
+
 from repro.lint.findings import PARSE_ERROR, UNUSED_PRAGMA, Finding
-from repro.lint.pragmas import collect_pragmas
-from repro.lint.rules import ALL_RULES, RULE_IDS, ModuleInfo, Rule
+from repro.lint.pragmas import PragmaTable, collect_pragmas
+from repro.lint.rules import (ALL_RULES, RULE_IDS, ModuleInfo, ProjectRule,
+                              Rule)
 
 
 @dataclass
@@ -42,29 +54,49 @@ class LintReport:
                 "suppressed": len(self.findings) - len(self.unsuppressed),
                 "unsuppressed": len(self.unsuppressed),
             },
-            "findings": [f.to_dict() for f in self.findings],
+            "findings": [dict(f.to_dict(), finding_id=fid)
+                         for f, fid in zip(self.findings,
+                                           finding_ids(self.findings))],
         }
 
 
-def lint_source(path: str, text: str,
-                rules: Optional[Sequence[Rule]] = None,
-                respect_pragmas: bool = True) -> List[Finding]:
-    """Lint one module given as source text. `path` scopes the rules."""
-    rules = ALL_RULES if rules is None else rules
+def finding_ids(findings: Sequence[Finding]) -> List[str]:
+    """Stable per-finding ids: hash of rule + path + source snippet —
+    deliberately LINE-INSENSITIVE, so CI lint artifacts diff cleanly
+    across runs that only shift line numbers. Repeats of the same
+    (rule, path, snippet) get a deterministic `-N` occurrence suffix
+    (findings arrive sorted)."""
+    seen: Dict[str, int] = {}
+    out: List[str] = []
+    for f in findings:
+        base = hashlib.sha1(
+            f"{f.rule}|{f.path}|{f.snippet}".encode()).hexdigest()[:12]
+        n = seen.get(base, 0)
+        seen[base] = n + 1
+        out.append(base if n == 0 else f"{base}-{n + 1}")
+    return out
+
+
+def _parse(path: str, text: str) -> ModuleInfo | Finding:
     norm = path.replace("\\", "/")
     try:
         tree = ast.parse(text, filename=path)
     except SyntaxError as exc:
-        return [Finding(norm, exc.lineno or 1, (exc.offset or 1) - 1,
-                        PARSE_ERROR, f"syntax error: {exc.msg}")]
-    mod = ModuleInfo(path=norm, tree=tree, text=text)
+        return Finding(norm, exc.lineno or 1, (exc.offset or 1) - 1,
+                       PARSE_ERROR, f"syntax error: {exc.msg}")
+    return ModuleInfo(path=norm, tree=tree, text=text)
+
+
+def _module_findings(mod: ModuleInfo,
+                     rules: Sequence[Rule]) -> List[Finding]:
     raw: List[Finding] = []
     for rule in rules:
-        if rule.applies(norm):
+        if not isinstance(rule, ProjectRule) and rule.applies(mod.path):
             raw.extend(rule.check(mod))
-    if not respect_pragmas:
-        return sorted(raw)
-    table = collect_pragmas(norm, text, known_rules=set(RULE_IDS))
+    return raw
+
+
+def _apply_pragmas(table: PragmaTable, raw: List[Finding]) -> List[Finding]:
     out: List[Finding] = list(table.problems)
     for f in raw:
         if table.covers(f.line, f.rule):
@@ -72,17 +104,39 @@ def lint_source(path: str, text: str,
         out.append(f)
     for pragma in table.unused():
         out.append(Finding(
-            norm, pragma.line, 0, UNUSED_PRAGMA,
+            table.path, pragma.line, 0, UNUSED_PRAGMA,
             f"pragma allow{list(pragma.rules)} suppresses nothing; "
             f"delete it (stale allowlists rot into blanket permission)"))
     return sorted(out)
 
 
+def lint_source(path: str, text: str,
+                rules: Optional[Sequence[Rule]] = None,
+                respect_pragmas: bool = True) -> List[Finding]:
+    """Lint one module given as source text with the per-module rules.
+    `path` scopes the rules. (Whole-program `ProjectRule`s need the full
+    module set and only run under `lint_paths`.)"""
+    rules = ALL_RULES if rules is None else rules
+    mod = _parse(path, text)
+    if isinstance(mod, Finding):
+        return [mod]
+    raw = _module_findings(mod, rules)
+    if not respect_pragmas:
+        return sorted(raw)
+    table = collect_pragmas(mod.path, text, known_rules=set(RULE_IDS))
+    return _apply_pragmas(table, raw)
+
+
 def lint_paths(paths: Iterable[str],
                rules: Optional[Sequence[Rule]] = None,
                respect_pragmas: bool = True) -> LintReport:
-    """Lint every .py file under `paths` (files or directories)."""
+    """Lint every .py file under `paths` (files or directories): the
+    per-module rules file by file, then every ProjectRule once over the
+    full parsed set, then one pragma pass over the combined findings."""
+    rules = ALL_RULES if rules is None else rules
     report = LintReport()
+    mods: List[ModuleInfo] = []
+    raw_by_path: Dict[str, List[Finding]] = {}
     for fpath in _iter_py_files(paths):
         try:
             with open(fpath, encoding="utf-8") as fh:
@@ -93,9 +147,24 @@ def lint_paths(paths: Iterable[str],
                 f"unreadable: {exc}"))
             continue
         report.files_checked += 1
-        report.findings.extend(
-            lint_source(fpath, text, rules=rules,
-                        respect_pragmas=respect_pragmas))
+        mod = _parse(fpath, text)
+        if isinstance(mod, Finding):
+            report.findings.append(mod)
+            continue
+        mods.append(mod)
+        raw_by_path[mod.path] = _module_findings(mod, rules)
+    for rule in rules:
+        if isinstance(rule, ProjectRule):
+            for f in rule.check_project(mods):
+                raw_by_path.setdefault(f.path, []).append(f)
+    for mod in mods:
+        raw = raw_by_path.get(mod.path, [])
+        if respect_pragmas:
+            table = collect_pragmas(mod.path, mod.text,
+                                    known_rules=set(RULE_IDS))
+            report.findings.extend(_apply_pragmas(table, raw))
+        else:
+            report.findings.extend(sorted(raw))
     report.findings.sort()
     return report
 

@@ -24,6 +24,11 @@ class Finding:
     `suppressed` marks a finding matched by a `# lint: allow[...]`
     pragma — reported for transparency (and for the delete-any-pragma
     acceptance test) but not counted toward the exit code.
+
+    `snippet` is the stripped source line the finding sits on: the
+    line-insensitive ingredient of the report's stable `finding_id`
+    (engine.finding_ids), so CI lint artifacts diff cleanly across runs
+    that only shift line numbers.
     """
     path: str
     line: int
@@ -31,6 +36,7 @@ class Finding:
     rule: str
     message: str
     suppressed: bool = False
+    snippet: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)

@@ -40,6 +40,7 @@ class Pragma:
 @dataclass
 class PragmaTable:
     """All pragmas of one file, indexed by the code line they cover."""
+    path: str = ""
     pragmas: List[Pragma] = field(default_factory=list)
     problems: List[Finding] = field(default_factory=list)
     _by_line: Dict[int, List[Pragma]] = field(default_factory=dict)
@@ -66,7 +67,7 @@ def collect_pragmas(path: str, text: str, known_rules: Set[str]
     `-- reason`) land in `problems` as BAD_PRAGMA findings instead of
     silently suppressing nothing.
     """
-    table = PragmaTable()
+    table = PragmaTable(path=path)
     comments: List[Tuple[int, int, str, bool]] = []  # line, col, text, own_line
     try:
         for tok in tokenize.generate_tokens(io.StringIO(text).readline):

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import ast
 from dataclasses import dataclass
-from typing import Callable, Iterator, List, Tuple
+from typing import Iterator, List, Sequence, Tuple
 
 from repro.lint.findings import Finding
 
@@ -26,6 +26,12 @@ class ModuleInfo:
 
     def parts(self) -> Tuple[str, ...]:
         return tuple(self.path.replace("\\", "/").split("/"))
+
+    def line(self, lineno: int) -> str:
+        lines = self.text.splitlines()
+        if 1 <= lineno <= len(lines):
+            return lines[lineno - 1].strip()
+        return ""
 
 
 class Rule:
@@ -43,8 +49,26 @@ class Rule:
 
     def finding(self, mod: ModuleInfo, node: ast.AST, message: str
                 ) -> Finding:
-        return Finding(mod.path, getattr(node, "lineno", 1),
-                       getattr(node, "col_offset", 0), self.id, message)
+        lineno = getattr(node, "lineno", 1)
+        return Finding(mod.path, lineno,
+                       getattr(node, "col_offset", 0), self.id, message,
+                       snippet=mod.line(lineno))
+
+
+class ProjectRule(Rule):
+    """A whole-program invariant: `check_project` sees EVERY parsed
+    module of the run at once (the interprocedural passes need the full
+    call graph even when only a few modules are in their finding scope).
+    `applies` still gates which paths may *carry findings*; the per-
+    module `check` is a no-op so the engine can treat both kinds
+    uniformly."""
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self, mods: Sequence[ModuleInfo]
+                      ) -> Iterator[Finding]:
+        raise NotImplementedError
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +96,13 @@ CONCURRENCY_FILES = (
     ("data", "device_feed.py"),
 )
 
+# The interprocedural passes' finding scope: the four executor modules
+# plus fleet.py (FleetBackend's churn hooks are the cross-module call
+# surface LiveFleet/ProcFleet lock traffic flows through). The call
+# graph itself spans every module handed to the run — only findings are
+# scoped.
+XFN_FILES = CONCURRENCY_FILES + (("data", "fleet.py"),)
+
 
 def in_sim_plane(path: str) -> bool:
     parts = tuple(path.replace("\\", "/").split("/"))
@@ -85,8 +116,14 @@ def in_concurrency_scope(path: str) -> bool:
     return parts[-2:] in [tuple(f) for f in CONCURRENCY_FILES]
 
 
+def in_xfn_scope(path: str) -> bool:
+    parts = tuple(path.replace("\\", "/").split("/"))
+    return parts[-2:] in [tuple(f) for f in XFN_FILES]
+
+
 def _registry() -> List[Rule]:
-    from repro.lint.rules import apis, concurrency, goldens, purity, specs
+    from repro.lint.rules import (apis, concurrency, goldens, purity, specs,
+                                  xfn)
     return [
         purity.SimWallClock(),
         purity.SimSleep(),
@@ -99,6 +136,9 @@ def _registry() -> List[Rule]:
         goldens.GoldenFieldDefault(),
         concurrency.LockOrderCycle(),
         concurrency.BlockingWhileLocked(),
+        xfn.XfnLockOrderCycle(),
+        xfn.XfnBlockingWhileLocked(),
+        xfn.ResourceLifecycle(),
     ]
 
 

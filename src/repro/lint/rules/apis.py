@@ -17,7 +17,7 @@ routinely tempt code out of that protocol:
 from __future__ import annotations
 
 import ast
-from typing import Iterator, Optional
+from typing import Iterator, List, Optional
 
 from repro.lint.findings import Finding
 from repro.lint.rules import ModuleInfo, Rule
@@ -53,7 +53,8 @@ class MpQueueProtocol(Rule):
         yield from self._scan(mod, mod.tree.body, owner=None)
 
     # ------------------------------------------------------------------
-    def _scan(self, mod: ModuleInfo, body, owner: Optional[ast.ClassDef]
+    def _scan(self, mod: ModuleInfo, body: List[ast.stmt],
+              owner: Optional[ast.ClassDef]
               ) -> Iterator[Finding]:
         for node in body:
             if isinstance(node, ast.ClassDef):

@@ -12,7 +12,7 @@ added since must default None.
 from __future__ import annotations
 
 import ast
-from typing import Iterator
+from typing import Iterator, Optional
 
 from repro.lint.findings import Finding
 from repro.lint.rules import ModuleInfo, Rule
@@ -56,7 +56,7 @@ class GoldenFieldDefault(Rule):
                         f"pinned golden record")
 
 
-def _defaults_to_none(value) -> bool:
+def _defaults_to_none(value: Optional[ast.expr]) -> bool:
     if value is None:
         return False                  # no default at all: also breaks goldens
     if isinstance(value, ast.Constant) and value.value is None:

@@ -10,10 +10,13 @@ than by convention.
 from __future__ import annotations
 
 import ast
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Union
 
 from repro.lint.findings import Finding
 from repro.lint.rules import ModuleInfo, Rule
+
+_AnyFunc = Union[ast.FunctionDef, ast.AsyncFunctionDef,
+                 ast.Lambda]
 
 _SPEC_SUFFIXES = ("Spec", "Event")
 _MUTABLE_CTORS = frozenset({"list", "dict", "set", "bytearray"})
@@ -80,7 +83,8 @@ class MutableDefault(Rule):
                     _dataclass_decorator(node) is not None:
                 yield from self._check_dataclass(mod, node)
 
-    def _check_func(self, mod: ModuleInfo, node) -> Iterator[Finding]:
+    def _check_func(self, mod: ModuleInfo, node: _AnyFunc
+                ) -> Iterator[Finding]:
         args = node.args
         defaults = list(args.defaults) + \
             [d for d in args.kw_defaults if d is not None]

@@ -1,0 +1,482 @@
+"""Interprocedural concurrency analysis: held-lock sets across calls.
+
+PR 9's lock-graph pass (rules/concurrency.py) is intra-function and
+per-module, so a lock inversion split across a call boundary — the
+shape of every real deadlock this repo has audited — is invisible to
+it. This pass propagates held-lock sets across calls the project call
+graph (lint/callgraph.py) can resolve, bounded-depth and cycle-safe:
+
+  - `xfn-lock-order-cycle`: the WHOLE-PROGRAM lock graph (lock ids
+    qualified by owning class, so `self._lock` of two classes never
+    alias) must be acyclic. Fires only on cycles the per-module intra
+    rule cannot see: at least one edge acquired in a different frame
+    than its held lock, or edges spanning modules.
+  - `xfn-blocking-while-locked`: an unbounded blocking call made while
+    holding a lock acquired by a CALLER frame. The callee looks clean
+    in isolation; the deadlock only exists on the combined stack.
+  - `resource-lifecycle`: every Thread/Process/pool spawn site must
+    have a join()/shutdown()/terminate() reachable from its owning
+    class (or owning function), over resolved calls — a spawn nobody
+    is contracted to reap is a leak the churn soak can only catch
+    probabilistically.
+
+Lock identity: `self.attr` qualifies to `<module-stem>.<Class>.<attr>`
+(one node per class attribute — the standard may-alias
+over-approximation across instances); a lock-typed argument to a
+resolved call renames the callee's parameter onto the caller's lock id;
+anything else qualifies to `<module-stem>.<text>`. Unresolved calls are
+recorded, never guessed — the runtime sanitizer (lint/runtime.py) is
+the cross-check for what this pass cannot see.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.lint.callgraph import CallGraph, ClassKey, FuncKey, _stem
+from repro.lint.findings import Finding
+from repro.lint.rules import (ModuleInfo, ProjectRule, in_xfn_scope)
+from repro.lint.rules.concurrency import _is_blocking, _lock_expr
+
+_MAX_DEPTH = 8
+
+_SPAWN_CTORS = frozenset({"Thread", "Process"})
+_POOL_CTORS = frozenset({"ThreadPoolExecutor", "ProcessPoolExecutor"})
+_REAP_ATTRS = frozenset({"join", "terminate", "shutdown", "kill"})
+_THREAD_BASES = frozenset({"Thread", "threading.Thread", "Process",
+                           "multiprocessing.Process", "mp.Process"})
+
+
+@dataclass(frozen=True)
+class _Edge:
+    """held -> acquired, with the evidence needed for a finding."""
+    held: str
+    acquired: str
+
+
+@dataclass
+class _EdgeInfo:
+    mod: ModuleInfo
+    node: ast.AST
+    cross: bool                       # held lock came from another frame
+    chain: Tuple[str, ...]            # call chain to the acquire site
+
+
+@dataclass
+class _Block:
+    """One blocking-call-under-caller-lock event."""
+    mod: ModuleInfo
+    node: ast.Call
+    what: str
+    lock: str
+    chain: Tuple[str, ...]
+
+
+@dataclass
+class XfnAnalysis:
+    """The shared result both xfn rules (and --runtime-report) consume."""
+    edges: Dict[_Edge, _EdgeInfo] = field(default_factory=dict)
+    blocking: List[_Block] = field(default_factory=list)
+    graph: Dict[str, Set[str]] = field(default_factory=dict)
+
+    def add_edge(self, held: str, acquired: str, info: _EdgeInfo) -> None:
+        self.graph.setdefault(held, set()).add(acquired)
+        key = _Edge(held, acquired)
+        prev = self.edges.get(key)
+        # keep the strongest evidence: a cross-frame sighting wins
+        if prev is None or (info.cross and not prev.cross):
+            self.edges[key] = info
+
+    def cycles(self) -> List[List[str]]:
+        out: List[List[str]] = []
+        seen: Set[Tuple[str, ...]] = set()
+
+        def dfs(node: str, path: List[str], on_path: Set[str]) -> None:
+            for nxt in sorted(self.graph.get(node, ())):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):] + [nxt]
+                    key = tuple(sorted(cyc[:-1]))
+                    if key not in seen:
+                        seen.add(key)
+                        out.append(cyc)
+                    continue
+                dfs(nxt, path + [nxt], on_path | {nxt})
+
+        for start in sorted(self.graph):
+            dfs(start, [start], {start})
+        return out
+
+
+@dataclass
+class _Held:
+    lock: str
+    frame: int                        # chain depth at acquisition
+
+
+class _XWalker:
+    """One frame of the interprocedural walk. Mirrors concurrency.py's
+    `_HeldWalker` statement discipline (with/acquire/release, suite-
+    scoped acquire, fresh stack for nested defs) but with qualified
+    lock ids, caller-held propagation, and call recursion."""
+
+    def __init__(self, analysis: XfnAnalysis, cg: CallGraph, fk: FuncKey,
+                 held: List[_Held], chain: Tuple[FuncKey, ...],
+                 renames: Dict[str, str]):
+        self.analysis = analysis
+        self.cg = cg
+        self.fk = fk
+        self.mod = cg.funcs[fk].mod
+        self.cls = cg.funcs[fk].cls
+        self.held = held
+        self.chain = chain
+        self.depth = len(chain) - 1
+        self.renames = renames
+        self.locals = cg.local_types(fk)
+
+    # -------------------------------------------------------- identities --
+    def qualify(self, node: ast.AST, text: str) -> str:
+        """Map a lock expression to its whole-program node id."""
+        stem = _stem(self.fk.module)
+        parts = text.split(".")
+        if parts[0] == "self" and self.cls is not None:
+            if len(parts) >= 3:
+                own = self.cg.classes.get(ClassKey(self.fk.module, self.cls))
+                tck = own.attr_types.get(parts[1]) if own else None
+                if tck is not None:
+                    return f"{_stem(tck.module)}.{tck.name}." \
+                           f"{'.'.join(parts[2:])}"
+            return f"{stem}.{self.cls}.{'.'.join(parts[1:])}"
+        if text in self.renames:
+            return self.renames[text]
+        return f"{stem}.{text}"
+
+    # ------------------------------------------------------- acquisition --
+    def _acquire(self, lock: str, node: ast.AST) -> None:
+        for h in self.held:
+            if h.lock != lock:
+                self.analysis.add_edge(h.lock, lock, _EdgeInfo(
+                    mod=self.mod, node=node,
+                    cross=h.frame != self.depth,
+                    chain=tuple(str(f) for f in self.chain)))
+        self.held.append(_Held(lock, self.depth))
+
+    def _release(self, lock: str) -> None:
+        for i in range(len(self.held) - 1, -1, -1):
+            if self.held[i].lock == lock:
+                del self.held[i]
+                return
+
+    # ---------------------------------------------------------- walking --
+    def walk_suite(self, body: List[ast.stmt]) -> None:
+        entered = len(self.held)
+        for stmt in body:
+            self._walk_stmt(stmt)
+        del self.held[entered:]
+
+    def _walk_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            locks = []
+            for item in stmt.items:
+                lock = _lock_expr(item.context_expr)
+                if lock is not None:
+                    qid = self.qualify(item.context_expr, lock)
+                    self._acquire(qid, item.context_expr)
+                    locks.append(qid)
+                else:
+                    self._scan_expr(item.context_expr)
+            self.walk_suite(stmt.body)
+            for qid in reversed(locks):
+                self._release(qid)
+            return
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            call = stmt.value
+            if isinstance(call.func, ast.Attribute):
+                recv_lock = _lock_expr(call.func.value)
+                if recv_lock is not None and call.func.attr == "acquire":
+                    self._scan_expr(call)
+                    self._acquire(self.qualify(call.func.value, recv_lock),
+                                  call)
+                    return
+                if recv_lock is not None and call.func.attr == "release":
+                    self._release(self.qualify(call.func.value, recv_lock))
+                    return
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested def runs later, on its own stack: fresh held set
+            # (its body is covered when IT is analyzed as a root — the
+            # closure's lock names are out of this frame's rename scope)
+            return
+        for expr in ast.iter_child_nodes(stmt):
+            if isinstance(expr, ast.expr):
+                self._scan_expr(expr)
+        for attr in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, attr, None)
+            if sub:
+                self.walk_suite(sub)
+        for handler in getattr(stmt, "handlers", []) or []:
+            self.walk_suite(handler.body)
+
+    def _scan_expr(self, expr: ast.expr) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            if self.held:
+                blocks, what = _is_blocking(node)
+                if blocks and what:
+                    # only the CROSS-frame holds are this rule's: a
+                    # same-frame hold is blocking-while-locked territory
+                    for h in reversed(self.held):
+                        if h.frame != self.depth:
+                            self.analysis.blocking.append(_Block(
+                                mod=self.mod, node=node, what=what,
+                                lock=h.lock,
+                                chain=tuple(str(f) for f in self.chain)))
+                            break
+            self._maybe_recurse(node)
+
+    # --------------------------------------------------------- recursion --
+    def _maybe_recurse(self, call: ast.Call) -> None:
+        if not self.held or self.depth + 1 >= _MAX_DEPTH:
+            return
+        callee = self.cg.resolve_call(self.fk, call, self.locals)
+        if callee is None or callee in self.chain:
+            return
+        fn = self.cg.funcs.get(callee)
+        if fn is None:
+            return
+        renames = self._param_renames(call, callee)
+        inner = _XWalker(self.analysis, self.cg, callee, self.held,
+                         self.chain + (callee,), renames)
+        inner.walk_suite(fn.node.body)
+
+    def _param_renames(self, call: ast.Call, callee: FuncKey
+                       ) -> Dict[str, str]:
+        """Map the callee's parameters onto the caller's lock ids for
+        lock-looking arguments, so a lock passed by argument keeps one
+        whole-program identity across the call."""
+        fn = self.cg.funcs[callee]
+        params = [a.arg for a in fn.node.args.args]
+        if fn.cls is not None and params and params[0] in ("self", "cls"):
+            params = params[1:]
+        out: Dict[str, str] = {}
+        for i, arg in enumerate(call.args):
+            lock = _lock_expr(arg)
+            if lock is not None and i < len(params):
+                out[params[i]] = self.qualify(arg, lock)
+        for kw in call.keywords:
+            if kw.arg is None:
+                continue
+            lock = _lock_expr(kw.value)
+            if lock is not None and kw.arg in [a.arg
+                                               for a in fn.node.args.args]:
+                out[kw.arg] = self.qualify(kw.value, lock)
+        return out
+
+
+def analyze_project(mods: Sequence[ModuleInfo],
+                    cg: Optional[CallGraph] = None) -> XfnAnalysis:
+    """Run the interprocedural pass: every function of every in-scope
+    module is a root; calls recurse only while a lock is held (a
+    lock-free call chain is fully covered by the callee's own root
+    walk), bounded at depth 8 and cycle-safe on the call chain."""
+    if cg is None:
+        cg = CallGraph(mods)
+    analysis = XfnAnalysis()
+    for fk in sorted(cg.funcs):
+        if not in_xfn_scope(fk.module):
+            continue
+        walker = _XWalker(analysis, cg, fk, held=[], chain=(fk,),
+                          renames={})
+        walker.walk_suite(cg.funcs[fk].node.body)
+    return analysis
+
+
+def static_edge_set(mods: Sequence[ModuleInfo]) -> Set[Tuple[str, str]]:
+    """The whole-program lock-order edges as (held, acquired) id pairs —
+    what `--runtime-report` diffs the observed graph against."""
+    analysis = analyze_project(mods)
+    return {(e.held, e.acquired) for e in analysis.edges}
+
+
+class _XfnScoped(ProjectRule):
+    def applies(self, path: str) -> bool:
+        return in_xfn_scope(path)
+
+
+def _run_once(mods: Sequence[ModuleInfo]) -> XfnAnalysis:
+    # one analysis per module set per engine run: both rules read it
+    key = tuple(id(m) for m in mods)
+    cached = _ANALYSIS_CACHE.get(key)
+    if cached is None:
+        cached = analyze_project(mods)
+        _ANALYSIS_CACHE.clear()           # one entry: runs don't overlap
+        _ANALYSIS_CACHE[key] = cached
+    return cached
+
+
+_ANALYSIS_CACHE: Dict[Tuple[int, ...], XfnAnalysis] = {}
+
+
+class XfnLockOrderCycle(_XfnScoped):
+    id = "xfn-lock-order-cycle"
+    doc = ("the WHOLE-PROGRAM lock graph (held sets propagated across "
+           "resolved calls) must be acyclic; fires only on cycles the "
+           "per-module rule cannot see")
+
+    def check_project(self, mods: Sequence[ModuleInfo]
+                      ) -> Iterator[Finding]:
+        analysis = _run_once(mods)
+        for cycle in analysis.cycles():
+            infos = [analysis.edges[_Edge(a, b)]
+                     for a, b in zip(cycle, cycle[1:])]
+            cross = [i for i in infos if i.cross]
+            modules = {i.mod.path for i in infos}
+            if not cross and len(modules) <= 1:
+                continue                  # the intra rule's finding
+            info = cross[0] if cross else infos[0]
+            if not self.applies(info.mod.path):
+                continue
+            via = " via " + " -> ".join(info.chain) if len(info.chain) > 1 \
+                else ""
+            yield self.finding(
+                info.mod, info.node,
+                f"cross-function lock-order cycle "
+                f"{' -> '.join(cycle)}{via}; impose one global "
+                f"acquisition order across the call boundary")
+
+
+class XfnBlockingWhileLocked(_XfnScoped):
+    id = "xfn-blocking-while-locked"
+    doc = ("no unbounded blocking call while holding a lock acquired by "
+           "a CALLER frame (the callee looks clean in isolation; the "
+           "freeze only exists on the combined stack)")
+
+    def check_project(self, mods: Sequence[ModuleInfo]
+                      ) -> Iterator[Finding]:
+        analysis = _run_once(mods)
+        seen: Set[Tuple[str, int, str]] = set()
+        for b in analysis.blocking:
+            if not self.applies(b.mod.path):
+                continue
+            key = (b.mod.path, b.node.lineno, b.lock)
+            if key in seen:
+                continue
+            seen.add(key)
+            yield self.finding(
+                b.mod, b.node,
+                f"unbounded {b.what}() while {b.lock} is held by a "
+                f"caller ({' -> '.join(b.chain)}); use a timeout and "
+                f"re-check, or move the call out of the critical "
+                f"section")
+
+
+class ResourceLifecycle(_XfnScoped):
+    id = "resource-lifecycle"
+    doc = ("every Thread/Process/pool spawn site must have a reachable "
+           "join()/shutdown()/terminate() in its owning class")
+
+    def check_project(self, mods: Sequence[ModuleInfo]
+                      ) -> Iterator[Finding]:
+        cg = CallGraph(mods)
+        reaps = {fk: self._has_reap(cg.funcs[fk].node) for fk in cg.funcs}
+        for mod in mods:
+            if not self.applies(mod.path):
+                continue
+            yield from self._check_module(mod, cg, reaps)
+
+    # ------------------------------------------------------------ spawns --
+    def _check_module(self, mod: ModuleInfo, cg: CallGraph,
+                      reaps: Dict[FuncKey, bool]) -> Iterator[Finding]:
+        for fk in sorted(cg.funcs):
+            if fk.module != mod.path:
+                continue
+            fn = cg.funcs[fk]
+            # nested defs are walked as part of their enclosing function
+            # (the call graph does not index closures), so their spawns
+            # are charged to the enclosing owner — the right contract:
+            # whoever's code spawned it must be able to reap it
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call) and \
+                        self._is_spawn(node, cg, mod.path):
+                    if not self._owner_reaps(fk, cg, reaps):
+                        owner = fn.cls if fn.cls is not None else \
+                            f"{fk.qual}()"
+                        yield self.finding(
+                            mod, node,
+                            f"thread/process spawned here has no "
+                            f"reachable join()/shutdown()/terminate() "
+                            f"in its owner {owner!r}; an unreaped "
+                            f"spawn is a leak the churn soak can only "
+                            f"catch probabilistically")
+
+    def _is_spawn(self, call: ast.Call, cg: CallGraph, module: str) -> bool:
+        name = ""
+        if isinstance(call.func, ast.Attribute):
+            name = call.func.attr
+        elif isinstance(call.func, ast.Name):
+            name = call.func.id
+        if name in _POOL_CTORS:
+            return True
+        if name in _SPAWN_CTORS:
+            # require target= so `psutil.Process(pid)` (an info query)
+            # and `str`-ish constructors never register as spawns
+            return any(kw.arg == "target" for kw in call.keywords)
+        # instantiation of a project class that IS a Thread/Process
+        ck = cg.lookup_class(name, module)
+        while ck is not None:
+            cn = cg.classes.get(ck)
+            if cn is None:
+                return False
+            if any(b in _THREAD_BASES or b.split(".")[-1] in _SPAWN_CTORS
+                   for b in cn.bases):
+                return True
+            nxt = None
+            for b in cn.bases:
+                nxt = cg.lookup_class(b, ck.module)
+                if nxt is not None:
+                    break
+            ck = nxt
+        return False
+
+    # ------------------------------------------------------------- reaps --
+    @staticmethod
+    def _has_reap(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _REAP_ATTRS and \
+                    not isinstance(node.func.value, ast.Constant):
+                return True               # ','.join(...) excluded above
+        return False
+
+    def _owner_reaps(self, spawn_fk: FuncKey, cg: CallGraph,
+                     reaps: Dict[FuncKey, bool]) -> bool:
+        """A reap call reachable (resolved calls, bounded) from any
+        method of the spawning class — or from the spawning function
+        itself when the spawn is not method-owned."""
+        fn = cg.funcs[spawn_fk]
+        if fn.cls is not None:
+            ck = ClassKey(spawn_fk.module, fn.cls)
+            cn = cg.classes.get(ck)
+            roots = sorted(cn.methods.values()) if cn else [spawn_fk]
+        else:
+            roots = [spawn_fk]
+        seen: Set[FuncKey] = set()
+        stack: List[Tuple[FuncKey, int]] = [(r, 0) for r in roots]
+        while stack:
+            fk, depth = stack.pop()
+            if fk in seen or depth >= _MAX_DEPTH:
+                continue
+            seen.add(fk)
+            if reaps.get(fk, False):
+                return True
+            node = cg.funcs.get(fk)
+            if node is None:
+                continue
+            locals_ = cg.local_types(fk)
+            for sub in ast.walk(node.node):
+                if isinstance(sub, ast.Call):
+                    callee = cg.resolve_call(fk, sub, locals_)
+                    if callee is not None and callee not in seen:
+                        stack.append((callee, depth + 1))
+        return False

@@ -1,0 +1,397 @@
+"""tsan-lite: runtime lock-order and blocking-under-lock sanitizer.
+
+`install()` swaps `threading.Lock` / `threading.RLock` for tracked
+factories and wraps `queue.Queue.get` / `queue.Queue.put`. While
+installed, every lock CREATED from project code (stdlib- and
+site-packages-created locks pass through untouched, so `queue.Queue`'s
+internal mutex never pollutes the graph) records:
+
+  * the observed lock-acquisition-order graph — an edge A -> B for
+    every acquisition of B while A is held on the same thread, matching
+    the static pass's all-held -> acquired edge semantics
+    (`repro.lint.rules.xfn`);
+  * held-duration histograms per lock (log-spaced ms buckets);
+  * blocking-under-lock events — an UNBOUNDED `Queue.get()`/`put()`
+    issued while the calling thread holds at least one tracked lock.
+
+`snapshot()` serializes all of it to a JSON-able dict; the pytest
+plugin in tests/conftest.py dumps it and fails the session on any
+observed cycle or over-threshold blocking event.  `reconcile()` then
+diffs the observed edges against the static whole-program graph —
+`python -m repro.lint --runtime-report <json>` — so an edge the walker
+cannot see (locks smuggled through callbacks, getattr indirection)
+still fails CI the first time a test actually exercises it.
+
+Soundness caveats (DESIGN.md §13): locks are attributed by CREATION
+site, so a lock bound to a bare local at creation (e.g. the per-stage
+closure lock in live_fleet.synthetic_stage_fns) cannot be mapped back
+to a static identity — its edges are counted as `unattributed`, never
+diffed. `multiprocessing` locks are process-shared and are NOT tracked.
+`threading.Condition` built on a tracked RLock would bypass the
+tracker's bookkeeping inside `wait()`; the repo has no such use and the
+linter's scope keeps it that way.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import queue
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+# Real factories, captured before any install() can rebind them.
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+_REAL_GET = queue.Queue.get
+_REAL_PUT = queue.Queue.put
+
+_STDLIB_DIR = os.path.dirname(os.path.abspath(threading.__file__))
+_SELF = os.path.abspath(__file__)
+
+_BUCKETS = ((1.0, "<1ms"), (10.0, "<10ms"), (100.0, "<100ms"),
+            (1000.0, "<1s"), (float("inf"), ">=1s"))
+_MAX_BLOCK_EVENTS = 1000
+
+
+def _bucket(ms: float) -> str:
+    for ceil, name in _BUCKETS:
+        if ms < ceil:
+            return name
+    return _BUCKETS[-1][1]
+
+
+@dataclass
+class _LockStats:
+    acquisitions: int = 0
+    held_ms_max: float = 0.0
+    held_ms_buckets: Dict[str, int] = field(default_factory=dict)
+
+    def record_hold(self, ms: float) -> None:
+        self.held_ms_max = max(self.held_ms_max, ms)
+        b = _bucket(ms)
+        self.held_ms_buckets[b] = self.held_ms_buckets.get(b, 0) + 1
+
+
+@dataclass
+class _HeldEntry:
+    lock: "TrackedLock"
+    t0: float
+    depth: int = 1               # RLock re-entry count
+
+
+class _State:
+    """All observations of one install() window. Guarded by a REAL lock
+    so the tracker can never deadlock through its own machinery."""
+
+    def __init__(self) -> None:
+        self.mu = _REAL_LOCK()
+        self.locks: Dict[str, _LockStats] = {}
+        self.edges: Dict[Tuple[str, str], int] = {}
+        self.blocking: List[Dict[str, Any]] = []
+        self.blocking_dropped = 0
+        self.tls = threading.local()
+
+    def held(self) -> List[_HeldEntry]:
+        stack = getattr(self.tls, "stack", None)
+        if stack is None:
+            stack = []
+            self.tls.stack = stack
+        return stack
+
+
+_STATE: Optional[_State] = None
+
+
+def _creation_site() -> Optional[str]:
+    """file:line of the first non-stdlib caller frame, or None when the
+    lock is created by stdlib / site-packages code (untracked)."""
+    frame = sys._getframe(2)
+    while frame is not None:
+        fn = frame.f_code.co_filename
+        if os.path.abspath(fn) != _SELF:
+            if (fn.startswith("<") or fn.startswith(_STDLIB_DIR)
+                    or "site-packages" in fn or "dist-packages" in fn):
+                return None
+            return f"{os.path.abspath(fn)}:{frame.f_lineno}"
+        frame = frame.f_back
+    return None
+
+
+class TrackedLock:
+    """A Lock/RLock proxy that records acquisition order and held time.
+
+    Unknown attributes delegate to the inner lock so duck-typed callers
+    (e.g. `locked()`) keep working."""
+
+    def __init__(self, inner: Any, site: str, reentrant: bool) -> None:
+        self._inner = inner
+        self.site = site
+        self._reentrant = reentrant
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._on_acquired()
+        return ok
+
+    def release(self) -> None:
+        self._on_released()
+        self._inner.release()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._inner, name)
+
+    # ------------------------------------------------------- bookkeeping --
+    def _on_acquired(self) -> None:
+        state = _STATE
+        if state is None:
+            return
+        stack = state.held()
+        if self._reentrant:
+            for entry in stack:
+                if entry.lock is self:
+                    entry.depth += 1          # re-entry: no edge, no new hold
+                    return
+        with state.mu:
+            stats = state.locks.setdefault(self.site, _LockStats())
+            stats.acquisitions += 1
+            for entry in stack:
+                if entry.lock.site != self.site:
+                    key = (entry.lock.site, self.site)
+                    state.edges[key] = state.edges.get(key, 0) + 1
+        stack.append(_HeldEntry(self, time.perf_counter()))
+
+    def _on_released(self) -> None:
+        state = _STATE
+        if state is None:
+            return
+        stack = state.held()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i].lock is self:
+                stack[i].depth -= 1
+                if stack[i].depth == 0:
+                    ms = (time.perf_counter() - stack[i].t0) * 1000.0
+                    del stack[i]
+                    with state.mu:
+                        state.locks.setdefault(
+                            self.site, _LockStats()).record_hold(ms)
+                return
+
+
+def _lock_factory() -> Any:
+    site = _creation_site()
+    if site is None or _STATE is None:
+        return _REAL_LOCK()
+    return TrackedLock(_REAL_LOCK(), site, reentrant=False)
+
+
+def _rlock_factory() -> Any:
+    site = _creation_site()
+    if site is None or _STATE is None:
+        return _REAL_RLOCK()
+    return TrackedLock(_REAL_RLOCK(), site, reentrant=True)
+
+
+def _record_blocking(op: str, ms: float) -> None:
+    state = _STATE
+    if state is None:
+        return
+    stack = state.held()
+    if not stack:
+        return
+    frame = sys._getframe(2)
+    site = f"{os.path.abspath(frame.f_code.co_filename)}:{frame.f_lineno}"
+    with state.mu:
+        if len(state.blocking) >= _MAX_BLOCK_EVENTS:
+            state.blocking_dropped += 1
+            return
+        state.blocking.append({
+            "op": op, "site": site,
+            "lock": stack[-1].lock.site, "ms": round(ms, 3),
+        })
+
+
+def _tracked_get(self: Any, block: bool = True,
+                 timeout: Optional[float] = None) -> Any:
+    state = _STATE
+    if state is not None and block and timeout is None and state.held():
+        t0 = time.perf_counter()
+        try:
+            return _REAL_GET(self, block, timeout)
+        finally:
+            _record_blocking("queue.get",
+                             (time.perf_counter() - t0) * 1000.0)
+    return _REAL_GET(self, block, timeout)
+
+
+def _tracked_put(self: Any, item: Any, block: bool = True,
+                 timeout: Optional[float] = None) -> Any:
+    state = _STATE
+    if state is not None and block and timeout is None and state.held():
+        t0 = time.perf_counter()
+        try:
+            return _REAL_PUT(self, item, block, timeout)
+        finally:
+            _record_blocking("queue.put",
+                             (time.perf_counter() - t0) * 1000.0)
+    return _REAL_PUT(self, item, block, timeout)
+
+
+# ---------------------------------------------------------------------------
+# install / snapshot
+# ---------------------------------------------------------------------------
+
+def install() -> None:
+    """Idempotently swap in the tracked factories and queue wrappers."""
+    global _STATE
+    if _STATE is not None:
+        return
+    _STATE = _State()
+    threading.Lock = _lock_factory            # type: ignore[misc, assignment]
+    threading.RLock = _rlock_factory          # type: ignore[misc, assignment]
+    queue.Queue.get = _tracked_get            # type: ignore[method-assign]
+    queue.Queue.put = _tracked_put            # type: ignore[method-assign]
+
+
+def uninstall() -> None:
+    global _STATE
+    if _STATE is None:
+        return
+    threading.Lock = _REAL_LOCK               # type: ignore[misc]
+    threading.RLock = _REAL_RLOCK             # type: ignore[misc]
+    queue.Queue.get = _REAL_GET               # type: ignore[method-assign]
+    queue.Queue.put = _REAL_PUT               # type: ignore[method-assign]
+    _STATE = None
+
+
+def installed() -> bool:
+    return _STATE is not None
+
+
+def _find_cycles(graph: Dict[str, Set[str]]) -> List[List[str]]:
+    out: List[List[str]] = []
+    seen: Set[Tuple[str, ...]] = set()
+
+    def dfs(node: str, path: List[str], on_path: Set[str]) -> None:
+        for nxt in sorted(graph.get(node, ())):
+            if nxt in on_path:
+                cyc = path[path.index(nxt):] + [nxt]
+                key = tuple(sorted(cyc[:-1]))
+                if key not in seen:
+                    seen.add(key)
+                    out.append(cyc)
+            elif nxt not in path:
+                dfs(nxt, path + [nxt], on_path | {nxt})
+
+    for root in sorted(graph):
+        dfs(root, [root], {root})
+    return out
+
+
+def snapshot() -> Dict[str, Any]:
+    """The observations so far as a JSON-able report (schema 1)."""
+    state = _STATE
+    if state is None:
+        return {"schema": 1, "locks": {}, "edges": [], "blocking": [],
+                "blocking_dropped": 0, "cycles": []}
+    with state.mu:
+        locks = {site: {"acquisitions": s.acquisitions,
+                        "held_ms_max": round(s.held_ms_max, 3),
+                        "held_ms_buckets": dict(s.held_ms_buckets)}
+                 for site, s in sorted(state.locks.items())}
+        edges = [{"held": a, "acquired": b, "count": n}
+                 for (a, b), n in sorted(state.edges.items())]
+        blocking = list(state.blocking)
+        dropped = state.blocking_dropped
+    graph: Dict[str, Set[str]] = {}
+    for e in edges:
+        graph.setdefault(e["held"], set()).add(e["acquired"])
+    return {"schema": 1, "locks": locks, "edges": edges,
+            "blocking": blocking, "blocking_dropped": dropped,
+            "cycles": _find_cycles(graph)}
+
+
+# ---------------------------------------------------------------------------
+# reconciliation: observed creation sites -> static qualified ids
+# ---------------------------------------------------------------------------
+
+def site_to_static_id(site: str, by_abspath: Dict[str, Any]
+                      ) -> Optional[str]:
+    """Map a runtime creation site `abs/path.py:line` to the qualified
+    lock id the static pass uses (`{stem}.{Class}.{attr}` for
+    `self.attr = threading.Lock()`). Returns None when the site falls
+    outside the analyzed module set or binds a bare local (ambiguous)."""
+    path, _, lineno_s = site.rpartition(":")
+    try:
+        lineno = int(lineno_s)
+    except ValueError:
+        return None
+    mod = by_abspath.get(os.path.abspath(path))
+    if mod is None:
+        return None
+    stem = os.path.splitext(os.path.basename(mod.path))[0]
+    # innermost class whose span covers the creation line
+    cls: Optional[str] = None
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef):
+            end = getattr(node, "end_lineno", node.lineno) or node.lineno
+            if node.lineno <= lineno <= end:
+                cls = node.name
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign) or not node.targets:
+            continue
+        end = getattr(node, "end_lineno", node.lineno) or node.lineno
+        if not node.lineno <= lineno <= end:
+            continue
+        tgt = node.targets[0]
+        if (isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self" and cls is not None):
+            return f"{stem}.{cls}.{tgt.attr}"
+        return None                  # bare local / tuple target: ambiguous
+    return None
+
+
+def reconcile(report: Dict[str, Any], mods: Sequence[Any]
+              ) -> Dict[str, Any]:
+    """Diff an observed runtime report against the static edge set.
+
+    Returns {"dynamic_only": [...], "matched": n, "unattributed": n,
+    "static_edges": n}. A dynamic-only edge — both endpoints map to
+    analyzed locks, yet the static pass never saw that ordering — is a
+    finding: the walker has a blind spot the tests just exercised."""
+    from repro.lint.rules.xfn import static_edge_set
+    static = static_edge_set(mods)
+    by_abspath = {os.path.abspath(m.path): m for m in mods}
+    cache: Dict[str, Optional[str]] = {}
+
+    def mapped(site: str) -> Optional[str]:
+        if site not in cache:
+            cache[site] = site_to_static_id(site, by_abspath)
+        return cache[site]
+
+    dynamic_only: List[Dict[str, Any]] = []
+    matched = 0
+    unattributed = 0
+    for e in report.get("edges", []):
+        a, b = mapped(e["held"]), mapped(e["acquired"])
+        if a is None or b is None:
+            unattributed += 1
+            continue
+        if (a, b) in static:
+            matched += 1
+        else:
+            dynamic_only.append({
+                "held": a, "acquired": b, "count": e.get("count", 1),
+                "held_site": e["held"], "acquired_site": e["acquired"]})
+    return {"dynamic_only": dynamic_only, "matched": matched,
+            "unattributed": unattributed, "static_edges": len(static)}

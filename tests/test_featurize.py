@@ -53,6 +53,7 @@ def test_hash_ids_stable_across_processes():
     """The hash reads no interpreter/RNG state: a spawned child (fresh
     interpreter, fresh seeds) must produce the same golden rows."""
     ctx = mp.get_context("spawn")
+    # lint: allow[mp-queue-protocol] -- one-shot child, q.get(timeout=30) then join below is the whole lifecycle
     q = ctx.Queue()
     p = ctx.Process(target=_child_hash, args=(q,))
     p.start()

@@ -8,11 +8,15 @@ silently stop firing nor start flagging sanctioned idioms.
 """
 from __future__ import annotations
 
+import importlib.util
 import json
 import os
+import queue as queue_mod
 import subprocess
 import sys
 import textwrap
+import threading
+import time
 
 import pytest
 
@@ -30,6 +34,17 @@ def rules_of(path, src, **kw):
     """Set of unsuppressed rule ids lint_source reports."""
     return {f.rule for f in lint_source(path, textwrap.dedent(src), **kw)
             if not f.suppressed}
+
+
+def lint_scoped(tmp_path, **files):
+    """Write {name: src} files under tmp/pkg/data/ (the xfn finding
+    scope) and lint the tree — ProjectRules only run via lint_paths."""
+    pkg = tmp_path / "pkg" / "data"
+    pkg.mkdir(parents=True, exist_ok=True)
+    for name, src in files.items():
+        (pkg / name).write_text(textwrap.dedent(src))
+    report = lint_paths([str(tmp_path)])
+    return {f.rule for f in report.unsuppressed}
 
 
 # ---------------------------------------------------------------------------
@@ -484,7 +499,9 @@ class TestEngine:
         assert d["ok"] is False
         (f,) = [x for x in d["findings"] if x["rule"] == "sim-wall-clock"]
         assert set(f) == {"path", "line", "col", "rule", "message",
-                          "suppressed"}
+                          "suppressed", "snippet", "finding_id"}
+        assert f["snippet"] == "t = time.time()"
+        assert len(f["finding_id"]) == 12
 
     def test_rule_registry_well_formed(self):
         ids = [r.id for r in ALL_RULES]
@@ -527,9 +544,12 @@ class TestCli:
 # is load-bearing
 # ---------------------------------------------------------------------------
 
+GATE_DIRS = ("src", "benchmarks", "examples", "tests")
+
+
 class TestRepoGate:
     def test_repo_lints_clean(self):
-        proc = _run_cli("--json", "src")
+        proc = _run_cli("--json", *GATE_DIRS)
         assert proc.returncode == 0, proc.stdout + proc.stderr
         report = json.loads(proc.stdout)
         assert report["ok"] is True
@@ -539,12 +559,13 @@ class TestRepoGate:
         # normal run: zero unused-pragma findings (each pragma suppresses
         # something). --no-pragmas: each suppression surfaces as a live
         # finding. Together: deleting any single pragma flips exit to 1.
-        clean = json.loads(_run_cli("--json", "src").stdout)
+        clean = json.loads(_run_cli("--json", *GATE_DIRS).stdout)
         assert not any(f["rule"] == "unused-pragma"
                        for f in clean["findings"])
         suppressed = [f for f in clean["findings"] if f["suppressed"]]
         assert suppressed, "expected the repo's sanctioned exceptions"
-        raw = json.loads(_run_cli("--json", "--no-pragmas", "src").stdout)
+        raw = json.loads(
+            _run_cli("--json", "--no-pragmas", *GATE_DIRS).stdout)
         live = {(f["path"], f["line"], f["rule"])
                 for f in raw["findings"] if not f["suppressed"]}
         for f in suppressed:
@@ -563,3 +584,522 @@ class TestRepoGate:
         report = lint_paths([str(tmp_path)])
         assert not report.ok
         assert any(f.rule == "sim-wall-clock" for f in report.unsuppressed)
+
+
+# ---------------------------------------------------------------------------
+# interprocedural (xfn) rules: the cross-function lock graph
+# ---------------------------------------------------------------------------
+
+# One fixture, used in BOTH directions: lint_paths must flag the cross-
+# function inversion statically, and running path_one()/path_two() live
+# under REPRO_SANITIZE must record the same cycle (see
+# TestSeededInversion below).
+INVERSION_SRC = """\
+import threading
+
+
+class Pool:
+    def __init__(self):
+        self.a_lock = threading.Lock()
+        self.b_lock = threading.Lock()
+
+    def _inner_ab(self):
+        with self.b_lock:
+            pass
+
+    def path_one(self):
+        with self.a_lock:
+            self._inner_ab()
+
+    def _inner_ba(self):
+        with self.a_lock:
+            pass
+
+    def path_two(self):
+        with self.b_lock:
+            self._inner_ba()
+"""
+
+
+class TestXfnStatic:
+    def test_cross_function_inversion_fires(self, tmp_path):
+        ids = lint_scoped(tmp_path, **{"executor.py": INVERSION_SRC})
+        assert "xfn-lock-order-cycle" in ids
+
+    def test_consistent_cross_function_order_is_clean(self, tmp_path):
+        src = """\
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self.a_lock = threading.Lock()
+                self.b_lock = threading.Lock()
+
+            def _inner(self):
+                with self.b_lock:
+                    pass
+
+            def path_one(self):
+                with self.a_lock:
+                    self._inner()
+
+            def path_two(self):
+                with self.a_lock:
+                    self._inner()
+        """
+        ids = lint_scoped(tmp_path, **{"executor.py": src})
+        assert "xfn-lock-order-cycle" not in ids
+
+    def test_intra_cycle_not_double_reported(self, tmp_path):
+        # a single-function inversion pair is the intra rule's territory:
+        # the xfn rule must stay quiet (no cross-frame edge, one module)
+        src = """\
+        def a(self):
+            with self.lock_a:
+                with self.lock_b:
+                    pass
+        def b(self):
+            with self.lock_b:
+                with self.lock_a:
+                    pass
+        """
+        ids = lint_scoped(tmp_path, **{"executor.py": src})
+        assert "lock-order-cycle" in ids
+        assert "xfn-lock-order-cycle" not in ids
+
+    def test_blocking_via_callee_fires(self, tmp_path):
+        src = """\
+        import queue
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.q = queue.Queue()
+
+            def _drain(self):
+                return self.q.get()
+
+            def snapshot(self):
+                with self.lock:
+                    return self._drain()
+        """
+        ids = lint_scoped(tmp_path, **{"executor.py": src})
+        assert "xfn-blocking-while-locked" in ids
+
+    def test_blocking_via_callee_with_timeout_is_clean(self, tmp_path):
+        src = """\
+        import queue
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.q = queue.Queue()
+
+            def _drain(self):
+                return self.q.get(timeout=0.05)
+
+            def snapshot(self):
+                with self.lock:
+                    return self._drain()
+        """
+        ids = lint_scoped(tmp_path, **{"executor.py": src})
+        assert "xfn-blocking-while-locked" not in ids
+
+    def test_thread_leak_fires(self, tmp_path):
+        src = """\
+        import threading
+
+        class Runner:
+            def start(self):
+                self._t = threading.Thread(target=self._work, daemon=True)
+                self._t.start()
+
+            def _work(self):
+                pass
+        """
+        ids = lint_scoped(tmp_path, **{"live_fleet.py": src})
+        assert "resource-lifecycle" in ids
+
+    def test_joined_thread_is_clean(self, tmp_path):
+        src = """\
+        import threading
+
+        class Runner:
+            def start(self):
+                self._t = threading.Thread(target=self._work, daemon=True)
+                self._t.start()
+
+            def _work(self):
+                pass
+
+            def close(self):
+                self._t.join(timeout=5)
+        """
+        ids = lint_scoped(tmp_path, **{"live_fleet.py": src})
+        assert "resource-lifecycle" not in ids
+
+    def test_reap_via_helper_method_is_clean(self, tmp_path):
+        # the reap may be reachable through a call chain, not direct
+        src = """\
+        import threading
+
+        class Runner:
+            def start(self):
+                self._t = threading.Thread(target=self._work, daemon=True)
+                self._t.start()
+
+            def _work(self):
+                pass
+
+            def _teardown(self):
+                self._t.join(timeout=5)
+
+            def close(self):
+                self._teardown()
+        """
+        ids = lint_scoped(tmp_path, **{"live_fleet.py": src})
+        assert "resource-lifecycle" not in ids
+
+    def test_xfn_rules_scoped_to_executor_modules(self, tmp_path):
+        pkg = tmp_path / "pkg" / "tools"
+        pkg.mkdir(parents=True)
+        (pkg / "misc.py").write_text(INVERSION_SRC)
+        report = lint_paths([str(tmp_path)])
+        assert not any(f.rule.startswith("xfn-") for f in report.findings)
+
+    def test_unresolved_call_is_recorded_not_guessed(self, tmp_path):
+        # the same inversion routed through a function-valued attribute:
+        # the call graph cannot resolve self._fn(), so the static rule
+        # must stay SILENT (no guessing) — this is the documented
+        # soundness hole the runtime sanitizer exists to cover
+        src = """\
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self.a_lock = threading.Lock()
+                self.b_lock = threading.Lock()
+                self._fn = self._inner_ba
+
+            def _inner_ab(self):
+                with self.b_lock:
+                    pass
+
+            def path_one(self):
+                with self.a_lock:
+                    self._inner_ab()
+
+            def _inner_ba(self):
+                with self.a_lock:
+                    pass
+
+            def path_two(self):
+                with self.b_lock:
+                    self._fn()
+        """
+        ids = lint_scoped(tmp_path, **{"executor.py": src})
+        assert "xfn-lock-order-cycle" not in ids
+        # ...and the resolver records the miss instead of dropping it
+        from repro.lint.callgraph import CallGraph
+        from repro.lint.engine import _parse
+        mod = _parse("pkg/data/executor.py", textwrap.dedent(src))
+        cg = CallGraph([mod])
+        for fk in list(cg.funcs):
+            if fk.qual.endswith("path_two"):
+                import ast as ast_mod
+                fn = cg.funcs[fk].node
+                calls = [n for n in ast_mod.walk(fn)
+                         if isinstance(n, ast_mod.Call)]
+                assert cg.resolve_call(fk, calls[0]) is None
+        assert any(t == "self._fn" for _, t, _ in cg.unresolved)
+
+
+# ---------------------------------------------------------------------------
+# stable finding ids
+# ---------------------------------------------------------------------------
+
+class TestFindingIds:
+    BAD = "import time\nt = time.time()\n"
+
+    def _id_of(self, tmp_path, text):
+        d = tmp_path / "data"
+        d.mkdir(exist_ok=True)
+        (d / "simulator.py").write_text(text)
+        report = lint_paths([str(tmp_path)]).to_dict()
+        (f,) = [x for x in report["findings"]
+                if x["rule"] == "sim-wall-clock"]
+        return f["finding_id"], f["line"]
+
+    def test_id_survives_line_shift(self, tmp_path):
+        # ids hash rule + path + snippet, NOT the line: the same file
+        # re-linted after lines shift keeps its ids (CI artifacts diff
+        # cleanly), while the line itself moves
+        fid_a, line_a = self._id_of(tmp_path, self.BAD)
+        shifted = "# a comment\n\nimport time\nt = time.time()\n"
+        fid_b, line_b = self._id_of(tmp_path, shifted)
+        assert line_a != line_b          # the location moved...
+        assert fid_a == fid_b            # ...the id did not
+
+    def test_distinct_findings_get_distinct_ids(self, tmp_path):
+        two = "import time\nt = time.time()\nu = time.perf_counter()\n"
+        d = tmp_path / "data"
+        d.mkdir()
+        (d / "simulator.py").write_text(two)
+        report = lint_paths([str(tmp_path)]).to_dict()
+        ids = [f["finding_id"] for f in report["findings"]]
+        assert len(ids) == len(set(ids))
+
+    def test_identical_snippets_get_occurrence_suffix(self, tmp_path):
+        dup = "import time\nt = time.time()\n\nt = time.time()\n"
+        d = tmp_path / "data"
+        d.mkdir()
+        (d / "simulator.py").write_text(dup)
+        report = lint_paths([str(tmp_path)]).to_dict()
+        ids = sorted(f["finding_id"] for f in report["findings"]
+                     if f["rule"] == "sim-wall-clock")
+        assert len(ids) == 2 and ids[1] == f"{ids[0]}-2"
+
+
+# ---------------------------------------------------------------------------
+# the runtime sanitizer (tsan-lite)
+# ---------------------------------------------------------------------------
+
+class _Sanitized:
+    """install() for the test's scope — but never tear down a sanitizer
+    the session-level plugin (REPRO_SANITIZE=1) already owns."""
+
+    def __enter__(self):
+        from repro.lint import runtime
+        self.runtime = runtime
+        self.owned = not runtime.installed()
+        if self.owned:
+            runtime.install()
+        return runtime
+
+    def __exit__(self, *exc):
+        if self.owned:
+            self.runtime.uninstall()
+
+
+def _edges_in(report, path):
+    prefix = os.path.abspath(path) + ":"
+    return [(e["held"], e["acquired"]) for e in report["edges"]
+            if e["held"].startswith(prefix)
+            and e["acquired"].startswith(prefix)]
+
+
+class TestSanitizer:
+    def test_observed_inversion_becomes_cycle(self):
+        with _Sanitized() as rt:
+            a = threading.Lock()
+            b = threading.Lock()
+            with a:
+                with b:
+                    pass
+            with b:
+                with a:
+                    pass
+            report = rt.snapshot()
+        here = _edges_in(report, __file__)
+        assert len(here) >= 2
+        sites = {s for e in here for s in e}
+        assert any(set(cyc) <= sites for cyc in report["cycles"])
+
+    def test_rlock_reentry_adds_no_self_edge(self):
+        with _Sanitized() as rt:
+            r = threading.RLock()
+            with r:
+                with r:
+                    pass
+            report = rt.snapshot()
+        assert not any(h == a for h, a in _edges_in(report, __file__))
+
+    def test_unbounded_get_under_lock_recorded(self):
+        with _Sanitized() as rt:
+            lock = threading.Lock()
+            q = queue_mod.Queue()
+            q.put("x")
+            with lock:
+                q.get()                        # unbounded: recorded
+            q.put("y")
+            with lock:
+                q.get(timeout=1)               # bounded: not recorded
+            report = rt.snapshot()
+        prefix = os.path.abspath(__file__) + ":"
+        mine = [b for b in report["blocking"]
+                if b["lock"].startswith(prefix)]
+        assert len(mine) == 1 and mine[0]["op"] == "queue.get"
+
+    def test_held_duration_histogram_recorded(self):
+        with _Sanitized() as rt:
+            lock = threading.Lock()
+            with lock:
+                time.sleep(0.002)
+            report = rt.snapshot()
+        prefix = os.path.abspath(__file__) + ":"
+        stats = [s for site, s in report["locks"].items()
+                 if site.startswith(prefix) and s["held_ms_max"] >= 1.0]
+        assert stats and sum(stats[0]["held_ms_buckets"].values()) == 1
+
+    def test_uninstall_restores_real_factories(self):
+        from repro.lint import runtime as rt
+        if rt.installed():
+            pytest.skip("session-level sanitizer owns the hooks")
+        rt.install()
+        rt.uninstall()
+        assert type(threading.Lock()) is type(rt._REAL_LOCK())
+        assert queue_mod.Queue.get is rt._REAL_GET
+
+
+class TestSeededInversion:
+    """Acceptance: ONE seeded cross-function inversion, caught BOTH ways
+    — statically by xfn-lock-order-cycle and live by the sanitizer."""
+
+    def test_static_rule_catches_it(self, tmp_path):
+        ids = lint_scoped(tmp_path, **{"executor.py": INVERSION_SRC})
+        assert "xfn-lock-order-cycle" in ids
+
+    def test_sanitizer_catches_it_live(self, tmp_path):
+        fix = tmp_path / "seeded_inversion.py"
+        fix.write_text(INVERSION_SRC)
+        with _Sanitized() as rt:
+            # import AFTER install so __init__'s locks are tracked
+            spec = importlib.util.spec_from_file_location(
+                "seeded_inversion", fix)
+            mod = importlib.util.module_from_spec(spec)
+            spec.loader.exec_module(mod)
+            pool = mod.Pool()
+            pool.path_one()
+            pool.path_two()
+            report = rt.snapshot()
+        here = _edges_in(report, str(fix))
+        assert len(here) == 2, report["edges"]
+        sites = {s for e in here for s in e}
+        assert any(set(cyc) <= sites for cyc in report["cycles"])
+
+
+class TestReconcile:
+    """Static-vs-runtime diff: observed edges the static pass explains
+    are matched; edges it cannot see become dynamic-only findings."""
+
+    SRC = textwrap.dedent("""\
+        import threading
+
+
+        class Pool:
+            def __init__(self):
+                self.a_lock = threading.Lock()
+                self.b_lock = threading.Lock()
+
+            def visible(self):
+                with self.a_lock:
+                    with self.b_lock:
+                        pass
+        """)
+    A_SITE, B_SITE = 6, 7                     # creation linenos in SRC
+
+    def _mods(self, tmp_path):
+        from repro.lint.engine import _parse
+        pkg = tmp_path / "pkg" / "data"
+        pkg.mkdir(parents=True)
+        path = pkg / "executor.py"
+        path.write_text(self.SRC)
+        return str(path), [_parse(str(path), self.SRC)]
+
+    def test_matched_and_dynamic_only_edges(self, tmp_path):
+        from repro.lint.runtime import reconcile
+        path, mods = self._mods(tmp_path)
+        report = {"edges": [
+            {"held": f"{path}:{self.A_SITE}",
+             "acquired": f"{path}:{self.B_SITE}", "count": 3},   # static sees
+            {"held": f"{path}:{self.B_SITE}",
+             "acquired": f"{path}:{self.A_SITE}", "count": 1},   # it does NOT
+        ]}
+        out = reconcile(report, mods)
+        assert out["matched"] == 1
+        (dyn,) = out["dynamic_only"]
+        assert dyn["held"] == "executor.Pool.b_lock"
+        assert dyn["acquired"] == "executor.Pool.a_lock"
+
+    def test_unmappable_sites_counted_not_flagged(self, tmp_path):
+        from repro.lint.runtime import reconcile
+        path, mods = self._mods(tmp_path)
+        report = {"edges": [
+            {"held": "/nowhere/else.py:3",
+             "acquired": f"{path}:{self.A_SITE}", "count": 1},
+        ]}
+        out = reconcile(report, mods)
+        assert out["dynamic_only"] == [] and out["unattributed"] == 1
+
+    def test_cli_runtime_report_exit_codes(self, tmp_path):
+        pkg = tmp_path / "pkg" / "data"
+        pkg.mkdir(parents=True)
+        path = pkg / "executor.py"
+        path.write_text(self.SRC)
+        clean = tmp_path / "clean.json"
+        clean.write_text(json.dumps({"edges": [
+            {"held": f"{path}:{self.A_SITE}",
+             "acquired": f"{path}:{self.B_SITE}", "count": 1}]}))
+        proc = _run_cli("--runtime-report", str(clean), str(tmp_path))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        dirty = tmp_path / "dirty.json"
+        dirty.write_text(json.dumps({"edges": [
+            {"held": f"{path}:{self.B_SITE}",
+             "acquired": f"{path}:{self.A_SITE}", "count": 1}]}))
+        proc = _run_cli("--runtime-report", str(dirty), str(tmp_path))
+        assert proc.returncode == 1
+        assert "runtime-edge-unmodeled" in proc.stdout
+
+
+class TestSanitizerOverhead:
+    """The sanitizer must stay cheap enough to run the real executor
+    suites under: < 2x wall time on an end-to-end ThreadedPipeline run
+    (plus a small epsilon so a near-zero baseline can't flake)."""
+
+    @staticmethod
+    def _run_pipeline(n_items=20):
+        from repro.data.executor import ThreadedPipeline
+        from repro.data.pipeline import StageGraph, StageSpec
+        spec = StageGraph("ovh", (
+            StageSpec("src", "udf", cost=0.002, serial_frac=0.0,
+                      inputs=()),
+            StageSpec("sink", "udf", cost=0.002, serial_frac=0.0,
+                      inputs=("src",)),
+        ), batch_mb=1.0)
+        count = [0]
+        gate = threading.Lock()
+
+        def source():
+            with gate:
+                if count[0] >= n_items:
+                    return None
+                count[0] += 1
+            time.sleep(0.002)
+            return count[0]
+
+        def sink(item):
+            time.sleep(0.002)
+            return item
+
+        t0 = time.perf_counter()
+        pipe = ThreadedPipeline(spec, fns={"src": source, "sink": sink},
+                                queue_depth=8, item_mb=1.0)
+        try:
+            pipe.set_allocation([1, 1], prefetch_mb=8.0)
+            while True:
+                try:
+                    pipe.get_batch(timeout=30)
+                except StopIteration:
+                    break
+        finally:
+            pipe.stop()
+        return time.perf_counter() - t0
+
+    def test_overhead_under_2x(self):
+        base = self._run_pipeline()
+        with _Sanitized():
+            sanitized = self._run_pipeline()
+        assert sanitized < 2.0 * base + 0.5, \
+            f"sanitized {sanitized:.3f}s vs base {base:.3f}s"
